@@ -1,0 +1,209 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows per benchmark.  Heavy artifacts
+(trained experts, router, Q-tables) are produced once by
+``python -m repro.core.experiment`` and re-read here; if absent, a reduced
+experiment is run automatically.
+
+  fig2      per-expert per-domain MLM accuracy (differential experts)
+  fig3a     optimal-model selection accuracy vs baselines
+  fig3b     domain -> expert allocation matrix fidelity
+  fig3cd    per-domain aggregate accuracy, Tryage vs experts
+  fig4      latent separation (silhouette scores)
+  fig5      Pareto front (lambda sweep)
+  router_eps  loss-prediction epsilon (paper: ~0.1)
+  kernels   Pallas kernel microbenches (us/call, interpret mode)
+  serving   engine throughput on batched requests
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def _results():
+    from repro.core import experiment as ex
+    try:
+        return ex.load_results()
+    except FileNotFoundError:
+        print("# no cached artifacts; running reduced experiment", flush=True)
+        xc = ex.ExperimentConfig(expert_steps=120, n_train_prompts=1024,
+                                 n_val_prompts=192, n_test_per_domain=48,
+                                 router_epochs=5)
+        return ex.run_experiment(xc, verbose=False)
+
+
+def bench_fig2(res):
+    rows = []
+    for d, accs in res["per_domain"].items():
+        experts = {k: v for k, v in accs.items() if k != "tryage"}
+        best = max(experts, key=experts.get)
+        gen = experts.get("roberta-analog", 0.0)
+        rows.append((f"fig2/{d}/best_expert", experts[best],
+                     f"{best};generalist={gen:.3f}"))
+    return rows
+
+
+def bench_fig3a(res):
+    rows = []
+    for k, v in res["selection_accuracy"].items():
+        rows.append((f"fig3a/selection_acc/{k.split()[0]}", v, ""))
+    return rows
+
+
+def bench_fig3b(res):
+    from repro.data.corpus import DOMAINS
+    alloc = np.array(res["allocation"])
+    lib = [e["name"] for e in res["library"]]
+    rows = []
+    for di, d in enumerate(DOMAINS):
+        mi = int(alloc[di].argmax())
+        rows.append((f"fig3b/top_alloc/{d}", float(alloc[di, mi]), lib[mi]))
+    return rows
+
+
+def bench_fig3cd(res):
+    rows = []
+    for d, accs in res["per_domain"].items():
+        gain = accs["tryage"] - accs.get("roberta-analog", 0.0)
+        rows.append((f"fig3cd/tryage_minus_generalist/{d}", gain, ""))
+    rows.append(("fig3cd/tryage_aggregate",
+                 res["aggregate_accuracy"]["tryage"],
+                 f"oracle={res['aggregate_accuracy']['oracle']:.3f}"))
+    return rows
+
+
+def bench_fig3a_mixed(res):
+    """Mixed-domain prompts (the paper's motivating case) — produced by
+    scripts/mixed_domain_eval.py from cached artifacts."""
+    import json
+    from repro.core import experiment as ex
+    path = os.path.join(ex.ART_DIR, "mixed_results.json")
+    with open(path) as f:
+        mixed = json.load(f)
+    rows = [(f"fig3a_mixed/selection_acc/{k.split()[0]}", v, "")
+            for k, v in mixed["selection_accuracy"].items()]
+    rows += [(f"fig3a_mixed/aggregate_acc/{k.split()[0]}", v, "")
+             for k, v in mixed["aggregate_accuracy"].items()]
+    return rows
+
+
+def bench_fig4(res):
+    return [(f"fig4/silhouette/{k}", v, "") for k, v in res["silhouette"].items()]
+
+
+def bench_fig5(res):
+    rows = []
+    pareto = res["pareto"]["rows"]
+    base = pareto[0]
+    for r in pareto:
+        if r["lam"] in (0.0, 1.0, 4.0, 16.0):
+            rows.append((f"fig5/acc_at_lam_{r['lam']}", r["accuracy"],
+                         f"size_frac={r['size_frac']:.3f}"))
+    # headline: compute saved at <=5% accuracy drop
+    ok = [r for r in pareto if r["accuracy"] >= base["accuracy"] - 0.05]
+    best = min(ok, key=lambda r: r["mean_size"])
+    rows.append(("fig5/compute_saved_at_5pct_drop",
+                 1.0 - best["mean_size"] / base["mean_size"],
+                 f"lam={best['lam']:.2f}"))
+    return rows
+
+
+def bench_router_eps(res):
+    return [("router_eps/mean_abs_err", res["router_eps"], "paper~0.1")]
+
+
+def bench_kernels(res):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.router_score.kernel import router_score_fused
+    from repro.kernels.mlstm_scan.ops import mlstm_chunkwise
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    def timeit(fn, *args, n=3):
+        fn(*args)  # compile
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(fn(*args))
+        return (time.time() - t0) / n * 1e6
+
+    q = jax.random.normal(key, (2, 256, 4, 64))
+    k = jax.random.normal(key, (2, 256, 2, 64))
+    us = timeit(lambda a, b: flash_attention(a, b, b, block_q=64, block_k=64),
+                q, k)
+    rows.append(("kernels/flash_attention_us", us, "interpret-mode 2x256x4x64"))
+
+    emb = jax.random.normal(key, (64, 128))
+    w1 = jax.random.normal(key, (128, 128)) * 0.1
+    w2 = jax.random.normal(key, (128, 11)) * 0.1
+    us = timeit(lambda e: router_score_fused(
+        e, w1, jnp.zeros(128), w2, jnp.zeros(11),
+        jnp.zeros((1, 11)), jnp.zeros((64, 1)), block_b=64), emb)
+    rows.append(("kernels/router_score_us", us, "interpret-mode 64x128"))
+
+    qm = jax.random.normal(key, (1, 128, 2, 32))
+    ig = jax.random.normal(key, (1, 128, 2))
+    st = {"C": jnp.zeros((1, 2, 32, 32)), "n": jnp.zeros((1, 2, 32)),
+          "m": jnp.zeros((1, 2))}
+    us = timeit(lambda a: mlstm_chunkwise(a, a, a, ig, ig + 3, st, chunk=32), qm)
+    rows.append(("kernels/mlstm_chunkwise_us", us, "interpret-mode 1x128x2x32"))
+    return rows
+
+
+def bench_serving(res):
+    from repro.core import experiment as ex
+    from repro.core.objective import size_constraint, recency_constraint
+    from repro.serving import Request, TryageEngine
+    from repro.data.batching import mlm_batch
+    art = ex.load_artifacts()
+    lib, rp, rc, corpus = (art["library"], art["router_params"], art["rc"],
+                           art["corpus"])
+    eng = TryageEngine(lib, rp, rc,
+                       [size_constraint(lib), recency_constraint(lib)],
+                       max_batch=32)
+    rng = np.random.default_rng(0)
+    uniform = {d: 1.0 / 8 for d in corpus.tables}
+    toks, _ = corpus.sample_mixture(uniform, 128, 128, rng)
+    mb = mlm_batch(toks, rng, 0.15, corpus.vocab_size)
+    for i in range(128):
+        eng.submit(Request(uid=i, tokens=mb["tokens"][i],
+                           targets=mb["targets"][i], mask=mb["mask"][i],
+                           lambdas={"size": 0.5} if i % 2 else {}))
+    t0 = time.time()
+    results = eng.run()
+    dt = time.time() - t0
+    accs = [r.accuracy for r in results if r.accuracy is not None]
+    return [
+        ("serving/requests_per_s", len(results) / dt, "128 reqs warm"),
+        ("serving/mean_accuracy", float(np.mean(accs)), ""),
+        ("serving/experts_used", float(len(eng.stats.per_expert)), ""),
+    ]
+
+
+BENCHES = [bench_fig2, bench_fig3a, bench_fig3a_mixed, bench_fig3b, bench_fig3cd, bench_fig4,
+           bench_fig5, bench_router_eps, bench_kernels, bench_serving]
+
+
+def main() -> None:
+    res = _results()
+    print("name,value,derived")
+    for bench in BENCHES:
+        try:
+            for name, value, derived in bench(res):
+                print(f"{name},{value:.6g},{derived}")
+        except Exception as e:  # noqa: BLE001
+            print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}")
+        sys.stdout.flush()
+
+
+if __name__ == '__main__':
+    main()

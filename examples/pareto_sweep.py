@@ -1,0 +1,43 @@
+"""Reproduce the paper's Fig. 5: sweep the size-penalty weight lambda and
+print the accuracy / compute Pareto front with allocation shifts."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import experiment as ex
+from repro.core.objective import size_constraint
+from repro.core.pareto import pareto_sweep
+
+try:
+    art = ex.load_artifacts()
+except FileNotFoundError:
+    print("training reduced library first ...")
+    xc = ex.ExperimentConfig(expert_steps=60, n_train_prompts=512,
+                             n_val_prompts=128, n_test_per_domain=24,
+                             router_epochs=3)
+    ex.run_experiment(xc, verbose=True)
+    art = ex.load_artifacts()
+
+lib, pred, q_test = art["library"], art["pred"], art["q_test"]
+front = pareto_sweep(pred, q_test, lib, size_constraint(lib))
+
+sizes = lib.sizes()
+print(f"{'lambda':>9} {'accuracy':>9} {'size_frac':>10}  top allocations")
+for row in front["rows"]:
+    alloc = np.array(row["alloc"])
+    top = np.argsort(-alloc)[:3]
+    tops = ", ".join(f"{lib.names[i]}:{alloc[i]:.0%}" for i in top
+                     if alloc[i] > 0.01)
+    print(f"{row['lam']:9.3f} {row['accuracy']:9.4f} "
+          f"{row['size_frac']:10.3f}  {tops}")
+
+base = front["rows"][0]
+ok = [r for r in front["rows"] if r["accuracy"] >= base["accuracy"] - 0.05]
+best = min(ok, key=lambda r: r["mean_size"])
+print(f"\nheadline: {1 - best['mean_size']/base['mean_size']:.0%} compute "
+      f"saved within 5% accuracy of the unconstrained router "
+      f"(lambda={best['lam']:.2f})")

@@ -1,0 +1,144 @@
+"""§Perf hillclimb driver.
+
+Three pairs selected from the baseline roofline table:
+  * xlstm_train   — worst roofline fraction (t_mem 6172s: the sequential
+                    mLSTM/sLSTM scans round-trip the matrix memory C
+                    through HBM every timestep)
+  * jamba_decode  — most collective-bound pair (t_coll > t_mem)
+  * qwen_decode   — most representative of the paper's technique (Tryage
+                    routes to small experts; decode latency IS the serving
+                    cost the router trades off)
+
+Each variant is one hypothesis -> change -> re-lower -> re-analyse cycle;
+results land in experiments/dryrun/*_<tag>.json next to the baselines.
+
+Usage:
+  PYTHONPATH=src python scripts/hillclimb.py [xlstm_train|jamba_decode|qwen_decode|all]
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_one
+from repro.launch.steps import PerfKnobs
+
+# name -> (arch, shape, [(tag, knobs, setup_fn, hypothesis)])
+EXPERIMENTS = {
+    "xlstm_train": (
+        "xlstm-1.3b", "train_4k", [
+            ("h1_chunkwise",
+             PerfKnobs(microbatch=4, unit_group=2),
+             "mlstm_chunkwise",
+             "per-timestep mLSTM scan writes the (B,H,dh,dh) matrix memory "
+             "C (1024x1024 f32 per head) to HBM 4096 times per layer; the "
+             "chunkwise-parallel closed form (same math as the Pallas "
+             "kernel) updates C once per 64-step chunk -> predict ~50-60x "
+             "reduction of the mLSTM share of the memory term"),
+            ("h2_chunkwise_mb1",
+             PerfKnobs(microbatch=1, unit_group=2),
+             "mlstm_chunkwise",
+             "with traffic collapsed, drop grad-accumulation (microbatch "
+             "4 -> 1) to stop re-reading weights 4x; watch peak memory"),
+        ]),
+    "jamba_decode": (
+        "jamba-v0.1-52b", "decode_32k", [
+            ("h1_nofsdp",
+             PerfKnobs(rule_overrides={"embed": None}),
+             None,
+             "decode has no optimizer state, so FSDP ('embed'->data) "
+             "sharding only forces an all-gather of every weight each "
+             "step; model-only sharding (52B*2B/16 = 6.5GB/chip weights) "
+             "should remove most collective bytes"),
+            ("h2_nofsdp_cache_batch",
+             PerfKnobs(rule_overrides={"embed": None, "cache": None}),
+             None,
+             "additionally keep the KV cache unsharded on seq (batch+kv "
+             "sharding only) to kill the involuntary-remat copies at the "
+             "cache update"),
+            ("h3_cache_only",
+             PerfKnobs(rule_overrides={"cache": None}),
+             None,
+             "h1 exceeded HBM (replicated 45B of MoE weights = +5.6GB/chip "
+             "plus gathered transients); keep FSDP for weights and only "
+             "fix the cache-update resharding (jamba kv=8 < 16 so the "
+             "cache stays batch-sharded, 8.6GB/chip — fits)"),
+            ("h4_pure_tp",
+             PerfKnobs(rule_overrides={
+                 "embed": None, "mlp": ("model", "data"),
+                 "heads": ("model", "data"), "kv_heads": ("model", "data"),
+                 "inner": ("model", "data"), "vocab": ("model", "data"),
+                 "capacity": None}),
+             None,
+             "decode re-gathers FSDP weights every token; instead shard "
+             "weights 256-way (pure TP over both axes: d_ff 14336 and "
+             "inner 8192 divide 256) so weights never move and the only "
+             "collectives are psums over (128, d) activations — predict "
+             "collective term drops by ~weight-bytes/activation-bytes "
+             "(~100x on the MoE layers) while weights stay 0.4GB/chip"),
+        ]),
+    "qwen_decode": (
+        "qwen1.5-0.5b", "decode_32k", [
+            ("h1_kvheads",
+             PerfKnobs(rule_overrides={"cache": None}),
+             None,
+             "cache seq dim sharded over 'model' makes the per-layer "
+             "softmax a cross-chip contraction and the cache update a "
+             "resharding copy; qwen1.5 has 16 kv heads == mesh axis, so "
+             "sharding kv_heads instead keeps attention chip-local"),
+            ("h2_kvheads_nofsdp",
+             PerfKnobs(rule_overrides={"cache": None, "embed": None}),
+             None,
+             "0.5B weights are 1GB bf16: replicate over 'data' (shard "
+             "model-only) to remove decode weight all-gathers"),
+        ]),
+}
+
+
+def _setup(flag):
+    if flag == "mlstm_chunkwise":
+        from repro.models import ssm
+        ssm.MLSTM_DEFAULT_IMPL = "chunkwise"
+    elif flag is None:
+        from repro.models import ssm
+        ssm.MLSTM_DEFAULT_IMPL = "xla"
+
+
+def main():
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    names = list(EXPERIMENTS) if which == "all" else [which]
+    for name in names:
+        arch, shape, variants = EXPERIMENTS[name]
+        _setup(None)
+        base = run_one(arch, shape, "pod", save=False, tag="")
+        rl0 = base["roofline"]
+        print(f"\n=== {name}: {arch} x {shape} (baseline) ===", flush=True)
+        print(f"  dom={rl0['dominant']} t_comp={rl0['t_compute_s']:.4f} "
+              f"t_mem={rl0['t_memory_s']:.4f} t_coll={rl0['t_collective_s']:.4f} "
+              f"peak={base['memory']['peak_bytes_per_device']/2**30:.2f}GiB")
+        dom0 = rl0["dominant"]
+        key = {"compute": "t_compute_s", "memory": "t_memory_s",
+               "collective": "t_collective_s"}[dom0]
+        for tag, knobs, setup, hyp in variants:
+            _setup(setup)
+            rec = run_one(arch, shape, "pod", knobs=knobs, save=True, tag=tag)
+            _setup(None)
+            if rec["status"] != "OK":
+                print(f"  [{tag}] FAILED: {rec.get('error','')[:200]}",
+                      flush=True)
+                continue
+            rl = rec["roofline"]
+            delta = (rl[key] - rl0[key]) / max(rl0[key], 1e-12)
+            print(f"  [{tag}] dom={rl['dominant']} "
+                  f"t_comp={rl['t_compute_s']:.4f} t_mem={rl['t_memory_s']:.4f} "
+                  f"t_coll={rl['t_collective_s']:.4f} "
+                  f"peak={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB "
+                  f"| dominant({dom0}) delta {delta:+.1%}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Generate the §Dry-run and §Roofline markdown tables from
+experiments/dryrun/*.json.  Usage:
+
+  PYTHONPATH=src python scripts/make_roofline_table.py [--mesh pod]
+"""
+
+import argparse
+import glob
+import json
+import os
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+DRY = os.path.join(REPO, "experiments", "dryrun")
+
+ARCHS = ["qwen2_vl_72b", "qwen15_05b", "jamba_v01_52b", "grok1_314b",
+         "qwen2_moe_a27b", "hubert_xlarge", "tinyllama_11b",
+         "starcoder2_15b", "xlstm_13b", "gemma3_4b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh, tag=""):
+    recs = {}
+    for a in ARCHS:
+        for s in SHAPES:
+            suffix = f"_{tag}" if tag else ""
+            path = os.path.join(DRY, f"{a}_{s}_{mesh}{suffix}.json")
+            if os.path.exists(path):
+                with open(path) as f:
+                    recs[(a, s)] = json.load(f)
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def emit(mesh, recs):
+    print(f"\n### {mesh} mesh ({'512' if mesh=='multipod' else '256'} chips)\n")
+    print("| arch | shape | status | params | peak GiB/dev | t_comp | "
+          "t_mem | t_coll | dominant | useful FLOP frac | coll ops |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPES:
+            r = recs.get((a, s))
+            if r is None:
+                print(f"| {a} | {s} | MISSING | | | | | | | | |")
+                continue
+            if r["status"] == "SKIP":
+                print(f"| {a} | {s} | SKIP | | | | | | | | "
+                      f"{r['reason'][:60]} |")
+                continue
+            if r["status"] == "FAIL":
+                print(f"| {a} | {s} | FAIL | | | | | | | | "
+                      f"{r['error'][:60]} |")
+                continue
+            rl = r["roofline"]
+            mem = r["memory"]["peak_bytes_per_device"] / 2**30
+            uf = r.get("useful_flops_frac")
+            coll = r["collectives"]["total_count"]
+            print(f"| {a} | {s} | OK | {r['total_params']/1e9:.1f}B | "
+                  f"{mem:.2f} | {fmt_s(rl['t_compute_s'])} | "
+                  f"{fmt_s(rl['t_memory_s'])} | {fmt_s(rl['t_collective_s'])} | "
+                  f"{rl['dominant']} | "
+                  f"{uf:.2f} | {coll} |" if uf is not None else "| - |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    meshes = [args.mesh] if args.mesh else ["pod", "multipod"]
+    for m in meshes:
+        emit(m, load(m, args.tag))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Mixed-domain evaluation — the paper's core argument for perceptive
+routing over model-card matching:
+
+  "users often seek to analyze data streams that contain information from
+   multiple domains ... even a file of python code might contain code and
+   comments; a clinical trial report will contain biomedical and
+   regulatory data."
+
+On PURE single-domain prompts a surface-statistics router (the
+Gorilla-class keyword baseline) can match the learned router, because our
+synthetic domains are perfectly separable by private-vocabulary counts.
+This script builds MIXED prompts (two domains concatenated at a random
+split) and re-evaluates: the keyword router must commit to the majority
+domain's expert, while Tryage predicts realized per-prompt loss.
+
+Reuses the cached experiment artifacts; writes
+experiments/tryage/mixed_results.json.
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core import experiment as ex
+from repro.core.qtable import build_q_table, mlm_accuracy
+from repro.core.router import predict_losses
+from repro.data.batching import mlm_batch
+from repro.data.corpus import DOMAINS
+
+art = ex.load_artifacts()
+lib, rp, rc, corpus = (art["library"], art["router_params"], art["rc"],
+                       art["corpus"])
+
+rng = np.random.default_rng(42)
+N, S = 512, 128
+halves = []
+pair_list = []
+for i in range(N):
+    d1, d2 = rng.choice(len(DOMAINS), size=2, replace=False)
+    cut = rng.integers(S // 4, 3 * S // 4)
+    t1 = corpus.sample_tokens(DOMAINS[d1], 1, S, rng)[0]
+    t2 = corpus.sample_tokens(DOMAINS[d2], 1, S, rng)[0]
+    halves.append(np.concatenate([t1[:cut], t2[cut:]]))
+    pair_list.append((int(d1), int(d2)))
+toks = np.stack(halves)
+
+batches = []
+for i in range(0, N, 64):
+    b = mlm_batch(toks[i:i + 64], rng, 0.15, corpus.vocab_size)
+    b["domain"] = np.full(len(b["tokens"]), -1, np.int32)
+    batches.append(b)
+q = build_q_table(lib, batches)
+masked = np.concatenate([b["tokens"] for b in batches])
+
+pred = np.concatenate([
+    np.asarray(jax.jit(lambda t: predict_losses(rp, rc, {"tokens": t}))(
+        masked[i:i + 256])) for i in range(0, N, 256)])
+
+choices = {
+    "tryage": pred.argmin(1),
+    "oracle": bl.oracle_choices(q),
+    "random": bl.random_router(N, len(lib), 0),
+    "leaderboard": bl.leaderboard_router(art["q_train"], N),
+    "keyword (gorilla-class)": bl.keyword_router(masked, corpus, lib),
+}
+res = {
+    "n_prompts": N,
+    "selection_accuracy": {k: bl.selection_accuracy(v, q)
+                           for k, v in choices.items()},
+    "aggregate_accuracy": {k: mlm_accuracy(q, v) for k, v in choices.items()},
+}
+out = os.path.join(ex.ART_DIR, "mixed_results.json")
+with open(out, "w") as f:
+    json.dump(res, f, indent=1)
+print(json.dumps(res, indent=1))

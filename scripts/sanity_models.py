@@ -1,0 +1,45 @@
+"""Quick developer sanity check: reduced variant of every arch runs
+train/prefill/decode on CPU without NaNs. Not part of the test suite."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.models import (decode_step, init_decode_state, init_model,
+                          lm_loss, prefill, count_params)
+
+archs = sys.argv[1:] or list_archs()
+key = jax.random.PRNGKey(0)
+for a in archs:
+    cfg = get_config(a).reduced()
+    params, logical = init_model(key, cfg)
+    B, S = 2, 64
+    if cfg.is_encoder or cfg.family in ("vlm", "audio"):
+        batch = {
+            "embeds": jax.random.normal(key, (B, S, cfg.d_model), jnp.float32),
+            "targets": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+            "mask": jnp.ones((B, S), jnp.int32),
+        }
+    else:
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        batch = {"tokens": toks}
+    loss, metrics = jax.jit(lambda p, b: lm_loss(p, cfg, b))(params, batch)
+    line = f"{a:18s} params={count_params(params):>10,d} loss={float(loss):8.4f}"
+    assert jnp.isfinite(loss), a
+    if not cfg.is_encoder:
+        pre_batch = dict(batch)
+        pre_batch.pop("targets", None), pre_batch.pop("mask", None)
+        logits, state = jax.jit(lambda p, b: prefill(p, cfg, b, cache_capacity=S + 1))(params, pre_batch)
+        assert jnp.all(jnp.isfinite(logits.astype(jnp.float32))), a
+        # decode one token against the prefill state
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        dbatch = {"tokens": tok}
+        if cfg.family == "vlm":
+            dbatch = {"tokens": tok}
+        lg, state = jax.jit(lambda p, b, st: decode_step(p, cfg, b, st, S))(
+            params, dbatch, state)
+        assert jnp.all(jnp.isfinite(lg.astype(jnp.float32))), a
+        line += " decode-ok"
+    print(line)
+print("ALL OK")

@@ -1,0 +1,4 @@
+from repro.checkpoint.store import (save_pytree, load_pytree,
+                                    CheckpointManager)
+
+__all__ = ["save_pytree", "load_pytree", "CheckpointManager"]

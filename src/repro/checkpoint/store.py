@@ -1,0 +1,115 @@
+"""Pytree checkpointing: npz payload + json treedef sidecar.
+
+``CheckpointManager`` implements the paper's recipe of keeping the best
+validation checkpoint (plus rolling last-k), which the router trainer uses
+for early stopping.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree):
+    flat = {}
+
+    def rec(node, prefix):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(node[k], prefix + [str(k)])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(v, prefix + [str(i)])
+        else:
+            flat[_SEP.join(prefix)] = np.asarray(node)
+
+    rec(tree, [])
+    return flat
+
+
+def _tree_structure(tree):
+    if isinstance(tree, dict):
+        return {"__kind__": "dict",
+                "items": {k: _tree_structure(v) for k, v in tree.items()}}
+    if isinstance(tree, tuple):
+        return {"__kind__": "tuple",
+                "items": [_tree_structure(v) for v in tree]}
+    if isinstance(tree, list):
+        return {"__kind__": "list",
+                "items": [_tree_structure(v) for v in tree]}
+    return {"__kind__": "leaf", "dtype": str(np.asarray(tree).dtype)}
+
+
+def _rebuild(struct, flat, prefix):
+    kind = struct["__kind__"]
+    if kind == "dict":
+        return {k: _rebuild(v, flat, prefix + [k])
+                for k, v in struct["items"].items()}
+    if kind in ("tuple", "list"):
+        seq = [_rebuild(v, flat, prefix + [str(i)])
+               for i, v in enumerate(struct["items"])]
+        return tuple(seq) if kind == "tuple" else seq
+    arr = flat[_SEP.join(prefix)]
+    if struct.get("dtype") == "bfloat16":
+        import ml_dtypes
+        arr = arr.view(ml_dtypes.bfloat16)
+    return arr
+
+
+def save_pytree(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tree = jax.tree.map(np.asarray, tree)
+    flat = _flatten_with_paths(tree)
+    # npz has no bf16 support: store as uint16 bits, restore from the
+    # dtype recorded in the json structure sidecar.
+    flat = {k: (v.view(np.uint16) if v.dtype.name == "bfloat16" else v)
+            for k, v in flat.items()}
+    np.savez(path + ".npz", **flat)
+    with open(path + ".json", "w") as f:
+        json.dump(_tree_structure(tree), f)
+
+
+def load_pytree(path: str):
+    with open(path + ".json") as f:
+        struct = json.load(f)
+    with np.load(path + ".npz") as z:
+        flat = {k: z[k] for k in z.files}
+    return _rebuild(struct, flat, [])
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 2):
+        self.dir = directory
+        self.keep_last = keep_last
+        self.best_metric = float("inf")
+        os.makedirs(directory, exist_ok=True)
+        self._steps: list[int] = []
+
+    def save(self, step: int, tree, metric: float | None = None) -> None:
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        save_pytree(path, tree)
+        self._steps.append(step)
+        if metric is not None and metric < self.best_metric:
+            self.best_metric = metric
+            for ext in (".npz", ".json"):
+                shutil.copyfile(path + ext,
+                                os.path.join(self.dir, "best" + ext))
+        while len(self._steps) > self.keep_last:
+            old = self._steps.pop(0)
+            for ext in (".npz", ".json"):
+                p = os.path.join(self.dir, f"step_{old:08d}" + ext)
+                if os.path.exists(p):
+                    os.remove(p)
+
+    def load_best(self):
+        return load_pytree(os.path.join(self.dir, "best"))
+
+    def load_step(self, step: int):
+        return load_pytree(os.path.join(self.dir, f"step_{step:08d}"))

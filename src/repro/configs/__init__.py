@@ -1,0 +1,45 @@
+"""Assigned-architecture configs + the paper's own Tryage library config.
+
+Each module exposes ``CONFIG`` (exact assigned spec).  ``get_config(name)``
+resolves by id; ``list_archs()`` enumerates the pool.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "qwen2_vl_72b",
+    "qwen15_05b",
+    "jamba_v01_52b",
+    "grok1_314b",
+    "qwen2_moe_a27b",
+    "hubert_xlarge",
+    "tinyllama_11b",
+    "starcoder2_15b",
+    "xlstm_13b",
+    "gemma3_4b",
+]
+
+_ALIASES = {
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "qwen1.5-0.5b": "qwen15_05b",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "grok-1-314b": "grok1_314b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a27b",
+    "hubert-xlarge": "hubert_xlarge",
+    "tinyllama-1.1b": "tinyllama_11b",
+    "starcoder2-15b": "starcoder2_15b",
+    "xlstm-1.3b": "xlstm_13b",
+    "gemma3-4b": "gemma3_4b",
+}
+
+
+def get_config(name: str):
+    mod_name = _ALIASES.get(name, name.replace("-", "_").replace(".", ""))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def list_archs():
+    return list(ARCH_IDS)

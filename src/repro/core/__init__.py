@@ -1,0 +1,19 @@
+"""Tryage core: the paper's contribution — a perceptive router that
+predicts per-prompt expert losses and routes under constraint objectives."""
+
+from repro.core.library import ExpertSpec, ModelLibrary, paper_library_specs
+from repro.core.objective import (Constraint, size_constraint,
+                                  recency_constraint, routing_scores, route)
+from repro.core.router import (RouterConfig, init_router, predict_losses,
+                               router_embed)
+from repro.core.qtable import build_q_table, mlm_accuracy
+from repro.core.training import TrainLog, train_router
+from repro.core.pareto import pareto_sweep
+
+__all__ = [
+    "ExpertSpec", "ModelLibrary", "paper_library_specs", "Constraint",
+    "size_constraint", "recency_constraint", "routing_scores", "route",
+    "RouterConfig", "init_router", "predict_losses", "router_embed",
+    "build_q_table", "mlm_accuracy", "TrainLog", "train_router",
+    "pareto_sweep",
+]

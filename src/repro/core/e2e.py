@@ -1,0 +1,98 @@
+"""End-to-end co-training of router + experts (paper eq. 4/5).
+
+Each step: (i) the router routes a batch of prompts (eq. 4); (ii) every
+selected expert takes a gradient step on the prompts routed to it (eq. 5);
+(iii) the router takes a gradient step towards the *freshly measured*
+losses of all experts on the batch (eq. 2).  Updates are decoupled, as the
+paper prescribes, so experts self-organize (SOM-style) toward the prompt
+distribution the router sends them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.library import ModelLibrary
+from repro.core.qtable import _per_prompt_metrics_jit
+from repro.core.router import RouterConfig, predict_losses
+from repro.core.training import router_loss
+from repro.data.batching import BatchIterator
+from repro.data.corpus import DomainCorpus
+from repro.models.model import lm_loss
+from repro.optim import adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class E2EState:
+    router_params: dict
+    router_opt: object
+    expert_opts: list
+    history: list = dataclasses.field(default_factory=list)
+
+
+def _expert_step_fn(cfg):
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch, remat=False), has_aux=True)(params)
+        p2, o2 = adamw_update(params, g, opt, lr=5e-4, weight_decay=1e-5)
+        return p2, o2, loss
+    return step
+
+
+def cotrain(library: ModelLibrary, router_params, rc: RouterConfig,
+            corpus: DomainCorpus, *, steps=50, batch=32, seq=128, seed=0,
+            router_lr=5e-5, verbose=False) -> E2EState:
+    st = E2EState(router_params=router_params,
+                  router_opt=adamw_init(router_params),
+                  expert_opts=[adamw_init(e.params) for e in library.experts])
+    uniform = {d: 1.0 / 8 for d in corpus.tables}
+    it = BatchIterator(corpus, uniform, batch, seq, seed=seed)
+    expert_steps = [_expert_step_fn(e.cfg) for e in library.experts]
+
+    @jax.jit
+    def router_step(p, o, toks, targets):
+        l, g = jax.value_and_grad(
+            lambda pp: router_loss(pp, rc, {"tokens": toks}, targets))(p)
+        p2, o2 = adamw_update(p, g, o, lr=router_lr, weight_decay=1e-5)
+        return p2, o2, l
+
+    score = jax.jit(lambda p, toks: predict_losses(p, rc, {"tokens": toks}))
+
+    for step_i in range(steps):
+        b = next(it)
+        toks = jnp.asarray(b["tokens"])
+        # (eq. 4) route
+        pred = np.asarray(score(st.router_params, toks))
+        choice = pred.argmin(axis=1)
+        # (eq. 5) update each selected expert on its routed prompts
+        for mi in np.unique(choice):
+            idx = np.where(choice == mi)[0]
+            sub = {k: jnp.asarray(v[idx]) for k, v in b.items()
+                   if k != "domain"}
+            e = library.experts[int(mi)]
+            e.params, st.expert_opts[mi], _ = expert_steps[int(mi)](
+                e.params, st.expert_opts[mi], sub)
+        # (eq. 2) refresh measured losses, update router toward them
+        losses = np.stack(
+            [np.asarray(_per_prompt_metrics_jit(
+                e.params, e.cfg,
+                {k: jnp.asarray(v) for k, v in b.items() if k != "domain"})[0])
+             for e in library.experts], axis=1)
+        st.router_params, st.router_opt, rl = router_step(
+            st.router_params, st.router_opt, toks, jnp.asarray(losses))
+        routed_loss = float(losses[np.arange(len(choice)), choice].mean())
+        best_loss = float(losses.min(axis=1).mean())
+        st.history.append({"step": step_i, "router_loss": float(rl),
+                           "routed_loss": routed_loss,
+                           "oracle_loss": best_loss})
+        if verbose and step_i % 10 == 0:
+            print(f"  e2e step {step_i}: router {float(rl):.4f} "
+                  f"routed {routed_loss:.3f} oracle {best_loss:.3f}",
+                  flush=True)
+    return st

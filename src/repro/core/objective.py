@@ -1,0 +1,61 @@
+"""The routing objective (paper eq. 1 / eq. 4).
+
+    M-hat = argmin_i [ L-hat(z, M_i) + sum_j lambda_j * C_j(M_i) ]
+
+Constraints are scalar functions of expert metadata; the user supplies
+weights lambda_j (via flags in the prompt, or programmatically).  With a
+ground-truth Q table this is the Oracle router R_O; with router-predicted
+losses it is the predictive router R_P.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.library import ModelLibrary
+
+
+@dataclasses.dataclass
+class Constraint:
+    name: str
+    values: np.ndarray  # (n_models,) scalar C_j(M_i)
+
+    @staticmethod
+    def from_fn(name: str, library: ModelLibrary, fn: Callable) -> "Constraint":
+        return Constraint(name, np.array([fn(e) for e in library.experts], float))
+
+
+def size_constraint(library: ModelLibrary) -> Constraint:
+    """Linear size penalty C(M_i) = |W_i| / max|W_i| (paper §Pareto)."""
+    sizes = library.sizes()
+    return Constraint("size", sizes / sizes.max())
+
+
+def log_size_constraint(library: ModelLibrary) -> Constraint:
+    sizes = library.sizes()
+    return Constraint("log_size", np.log(sizes) / np.log(sizes).max())
+
+
+def recency_constraint(library: ModelLibrary) -> Constraint:
+    """Penalize stale models: C = 1 - recency."""
+    return Constraint("recency", 1.0 - library.recencies())
+
+
+def routing_scores(pred_losses, constraints: Sequence[Constraint],
+                   lambdas: Sequence[float]):
+    """(…, n_models) combined routing loss L_R."""
+    assert len(constraints) == len(lambdas)
+    score = jnp.asarray(pred_losses)
+    for c, lam in zip(constraints, lambdas):
+        score = score + lam * jnp.asarray(c.values, score.dtype)
+    return score
+
+
+def route(pred_losses, constraints: Sequence[Constraint] = (),
+          lambdas: Sequence[float] = ()):
+    """argmin of the routing objective. pred_losses: (…, n_models)."""
+    return jnp.argmin(routing_scores(pred_losses, constraints, lambdas), axis=-1)

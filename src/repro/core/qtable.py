@@ -1,0 +1,73 @@
+"""Q-table construction: ground-truth per-prompt expert losses.
+
+The Oracle router (paper eq. 1) needs L(z, M_i) for every prompt z and
+expert M_i.  We compute per-prompt masked-LM loss and masked-token top-1
+accuracy by running each expert over the evaluation prompts.  This is the
+supervision signal for the predictive router (eq. 2) and the evaluation
+target for routing accuracy (paper Fig. 3a).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.library import ModelLibrary
+from repro.models.model import forward
+
+
+def _per_prompt_metrics(params, cfg, batch):
+    """Returns (loss (B,), acc (B,)) for an MLM batch."""
+    logits, _, _ = forward(params, cfg, batch, mode="train", remat=False)
+    logits = logits.astype(jnp.float32)
+    targets, mask = batch["targets"], batch["mask"].astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(-1), 1.0)
+    loss = nll.sum(-1) / denom
+    pred = jnp.argmax(logits, axis=-1)
+    acc = ((pred == targets).astype(jnp.float32) * mask).sum(-1) / denom
+    return loss, acc
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _per_prompt_metrics_jit(params, cfg, batch):
+    return _per_prompt_metrics(params, cfg, batch)
+
+
+def build_q_table(library: ModelLibrary, batches: list[dict],
+                  progress: bool = False):
+    """Run every expert over every batch of prompts.
+
+    batches: list of MLM batches (each {"tokens","targets","mask"}).
+    Returns dict with:
+      loss (N, n_models), acc (N, n_models), domain (N,)
+    """
+    losses, accs = [], []
+    domains = np.concatenate([b["domain"] for b in batches])
+    for e in library.experts:
+        el, ea = [], []
+        for b in batches:
+            jb = {k: jnp.asarray(v) for k, v in b.items() if k != "domain"}
+            l, a = _per_prompt_metrics_jit(e.params, e.cfg, jb)
+            el.append(np.asarray(l))
+            ea.append(np.asarray(a))
+        losses.append(np.concatenate(el))
+        accs.append(np.concatenate(ea))
+        if progress:
+            print(f"  qtable: {e.name} mean_loss={np.mean(losses[-1]):.3f} "
+                  f"mean_acc={np.mean(accs[-1]):.3f}", flush=True)
+    return {
+        "loss": np.stack(losses, axis=1),
+        "acc": np.stack(accs, axis=1),
+        "domain": domains,
+    }
+
+
+def mlm_accuracy(qtable: dict, choices: np.ndarray) -> float:
+    """Aggregate MLM accuracy achieved by a routing policy ``choices``."""
+    return float(np.mean(qtable["acc"][np.arange(len(choices)), choices]))

@@ -1,0 +1,94 @@
+"""The perceptive router R(z, M_i; W).
+
+A small encoder LM (BERT-tiny/small scale, per the paper: "we achieved
+favorable loss prediction accuracy with Bert-tiny... we selected
+BERT-small since larger models did not yield better performance") with a
+regression head producing an |M|-dimensional vector of predicted
+downstream losses — the learned Q function over routing actions.
+
+The router also exposes its pooled embedding (``router_embed``) for the
+latent-separation analysis of paper Fig. 4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import AttnConfig, ModelConfig
+from repro.models.layers import _init
+from repro.models.model import encode, init_model
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    n_models: int
+    vocab_size: int = 512
+    num_layers: int = 4           # BERT-small scale
+    d_model: int = 128
+    num_heads: int = 4
+    d_ff: int = 512
+    head_hidden: int = 128
+
+    def encoder_config(self) -> ModelConfig:
+        return ModelConfig(
+            name="tryage-router", family="dense",
+            num_layers=self.num_layers, d_model=self.d_model,
+            num_heads=self.num_heads, num_kv_heads=self.num_heads,
+            d_ff=self.d_ff, vocab_size=self.vocab_size,
+            attn=AttnConfig(rope_theta=10000.0, causal=False),
+            layer_pattern=("attn",), moe_pattern=(False,),
+            is_encoder=True, tie_embeddings=True, norm_kind="layernorm",
+            act="gelu", dtype="float32")
+
+
+def init_router(key, rc: RouterConfig):
+    k_enc, k_h1, k_h2 = jax.random.split(key, 3)
+    enc_cfg = rc.encoder_config()
+    enc_params, enc_logical = init_model(k_enc, enc_cfg)
+    d, hh = rc.d_model, rc.head_hidden
+    params = {
+        "encoder": enc_params,
+        "head": {
+            "w1": _init(k_h1, (d, hh), 1 / math.sqrt(d), jnp.float32),
+            "b1": jnp.zeros((hh,), jnp.float32),
+            "w2": _init(k_h2, (hh, rc.n_models), 1 / math.sqrt(hh), jnp.float32),
+            "b2": jnp.zeros((rc.n_models,), jnp.float32),
+        },
+    }
+    logical = {
+        "encoder": enc_logical,
+        "head": {"w1": ("embed", "mlp"), "b1": ("mlp",),
+                 "w2": ("mlp", "vocab"), "b2": ("vocab",)},
+    }
+    return params, logical
+
+
+def _pool(hidden, tokens):
+    """Mean-pool over non-pad positions. hidden (B,S,d), tokens (B,S)."""
+    valid = (tokens != 0).astype(hidden.dtype)[..., None]
+    return (hidden * valid).sum(1) / jnp.maximum(valid.sum(1), 1.0)
+
+
+def router_embed(params, rc: RouterConfig, batch, use_kernel=False):
+    """Pooled prompt embedding (B, d)."""
+    hidden = encode(params["encoder"], rc.encoder_config(), batch)
+    return _pool(hidden, batch["tokens"])
+
+
+def predict_losses(params, rc: RouterConfig, batch, use_kernel=False):
+    """Predicted per-expert losses L-hat (B, n_models), in log-loss units.
+
+    softplus keeps predictions positive (losses are non-negative), which
+    stabilizes early training against the MSE divergence.
+    """
+    emb = router_embed(params, rc, batch)
+    if use_kernel:
+        from repro.kernels.router_score import ops as rs_ops
+        return rs_ops.router_head(emb, params["head"])
+    h = jax.nn.gelu(emb @ params["head"]["w1"] + params["head"]["b1"])
+    raw = h @ params["head"]["w2"] + params["head"]["b2"]
+    return jax.nn.softplus(raw)

@@ -1,0 +1,157 @@
+"""Router training (paper eq. 2/3) and expert pre-training.
+
+Paper recipe, reproduced: ADAM, weight decay 1e-5, lr 5e-5 with
+exponential decay 0.9, inputs curtailed to a fixed token budget, early
+stopping with patience conditioned on validation loss measured 4x per
+epoch, checkpointing of the best validation model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.library import ExpertSpec, ModelLibrary
+from repro.core.router import RouterConfig, init_router, predict_losses
+from repro.data.batching import BatchIterator, mlm_batch
+from repro.data.corpus import DomainCorpus
+from repro.models.model import count_params, init_model, lm_loss
+from repro.optim import adamw_init, adamw_update, exp_decay_schedule
+
+
+@dataclasses.dataclass
+class TrainLog:
+    steps: list = dataclasses.field(default_factory=list)
+    train_loss: list = dataclasses.field(default_factory=list)
+    val_loss: list = dataclasses.field(default_factory=list)
+    best_val: float = float("inf")
+    best_step: int = -1
+    stopped_early: bool = False
+
+
+# ----------------------------------------------------------- experts
+
+def train_expert(spec: ExpertSpec, corpus: DomainCorpus, *, steps=300,
+                 batch=16, seq=128, lr=1e-3, seed=0, log_every=100,
+                 verbose=False) -> ExpertSpec:
+    """MLM-train one expert on its domain mixture."""
+    key = jax.random.PRNGKey(seed)
+    params, _ = init_model(key, spec.cfg)
+    opt = adamw_init(params)
+    it = BatchIterator(corpus, spec.train_mixture, batch, seq, seed=seed + 1)
+
+    @jax.jit
+    def step_fn(p, o, b):
+        (loss, _), g = jax.value_and_grad(
+            lambda pp: lm_loss(pp, spec.cfg, b, remat=False), has_aux=True)(p)
+        p2, o2 = adamw_update(p, g, o, lr=lr, weight_decay=1e-5)
+        return p2, o2, loss
+
+    for i in range(steps):
+        b = next(it)
+        jb = {k: jnp.asarray(v) for k, v in b.items() if k != "domain"}
+        params, opt, loss = step_fn(params, opt, jb)
+        if verbose and (i % log_every == 0 or i == steps - 1):
+            print(f"    {spec.name} step {i} loss {float(loss):.3f}", flush=True)
+    spec.params = params
+    spec.n_params = count_params(params)
+    return spec
+
+
+def train_library(library: ModelLibrary, corpus: DomainCorpus, *, steps=300,
+                  batch=16, seq=128, seed=0, verbose=True) -> ModelLibrary:
+    for i, e in enumerate(library.experts):
+        t0 = time.time()
+        train_expert(e, corpus, steps=steps, batch=batch, seq=seq,
+                     seed=seed + i, verbose=False)
+        if verbose:
+            print(f"  trained {e.name}: {e.n_params:,d} params "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    return library
+
+
+# ------------------------------------------------------------ router
+
+def router_loss(params, rc: RouterConfig, batch, target_losses,
+                divergence="mse"):
+    """Divergence D(R(z;W) || L(z, M_i)) summed over the library (eq. 2)."""
+    pred = predict_losses(params, rc, batch)
+    t = jnp.asarray(target_losses, jnp.float32)
+    if divergence == "mse":
+        return jnp.mean(jnp.square(pred - t))
+    if divergence == "huber":
+        d = jnp.abs(pred - t)
+        return jnp.mean(jnp.where(d < 1.0, 0.5 * d * d, d - 0.5))
+    raise ValueError(divergence)
+
+
+def train_router(router_params, rc: RouterConfig, train_data, val_data, *,
+                 epochs=8, batch=32, lr=5e-5, lr_decay=0.9, patience=16,
+                 weight_decay=1e-5, seed=0, divergence="mse",
+                 verbose=True) -> tuple[dict, TrainLog]:
+    """Supervised router training with the paper's recipe.
+
+    train_data/val_data: dicts {"tokens": (N,S), "loss": (N, n_models)}.
+    lr decays exponentially by ``lr_decay`` per epoch; validation is
+    measured 4x per epoch; early stopping patience in validation checks.
+    """
+    N = train_data["tokens"].shape[0]
+    steps_per_epoch = max(N // batch, 1)
+    schedule = exp_decay_schedule(lr, lr_decay, steps_per_epoch)
+    opt = adamw_init(router_params)
+    rng = np.random.default_rng(seed)
+    log = TrainLog()
+    best_params = router_params
+    val_every = max(steps_per_epoch // 4, 1)
+    bad = 0
+
+    @jax.jit
+    def step_fn(p, o, toks, targets):
+        l, g = jax.value_and_grad(
+            lambda pp: router_loss(pp, rc, {"tokens": toks}, targets,
+                                   divergence))(p)
+        p2, o2 = adamw_update(p, g, o, lr=schedule,
+                              weight_decay=weight_decay)
+        return p2, o2, l
+
+    @jax.jit
+    def val_fn(p):
+        return router_loss(p, rc, {"tokens": jnp.asarray(val_data["tokens"])},
+                           val_data["loss"], divergence)
+
+    step = 0
+    for ep in range(epochs):
+        perm = rng.permutation(N)
+        for s in range(steps_per_epoch):
+            idx = perm[s * batch:(s + 1) * batch]
+            router_params, opt, l = step_fn(
+                router_params, opt, jnp.asarray(train_data["tokens"][idx]),
+                jnp.asarray(train_data["loss"][idx]))
+            step += 1
+            if step % val_every == 0:
+                vl = float(val_fn(router_params))
+                log.steps.append(step)
+                log.train_loss.append(float(l))
+                log.val_loss.append(vl)
+                if vl < log.best_val - 1e-5:
+                    log.best_val, log.best_step = vl, step
+                    best_params = jax.tree.map(lambda x: x, router_params)
+                    bad = 0
+                else:
+                    bad += 1
+                if bad >= patience:
+                    log.stopped_early = True
+                    if verbose:
+                        print(f"  early stop at step {step} "
+                              f"(best val {log.best_val:.4f})", flush=True)
+                    return best_params, log
+        if verbose:
+            print(f"  epoch {ep}: train {float(l):.4f} "
+                  f"val {log.val_loss[-1] if log.val_loss else float('nan'):.4f}",
+                  flush=True)
+    return best_params, log

@@ -1,0 +1,4 @@
+from repro.data.corpus import DOMAINS, DomainCorpus
+from repro.data.batching import mlm_batch, clm_batch, BatchIterator
+
+__all__ = ["DOMAINS", "DomainCorpus", "mlm_batch", "clm_batch", "BatchIterator"]

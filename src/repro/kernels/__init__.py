@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the performance-critical hot spots.
+
+  flash_attention/  block-wise online-softmax attention (train/prefill)
+  router_score/     fused Tryage routing head: scores + constraint add +
+                    argmin without an HBM round-trip
+  mlstm_scan/       chunkwise-parallel mLSTM recurrence (xLSTM family)
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper) and ref.py (pure-jnp oracle).  On this CPU container they
+are validated with interpret=True; on TPU the same BlockSpecs give
+VMEM-resident tiles with MXU-aligned (128-multiple) matmul dims.
+"""

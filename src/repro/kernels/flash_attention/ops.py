@@ -1,0 +1,28 @@
+"""Public wrapper: model-layout (B, S, H, hd) GQA flash attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128, interpret=True):
+    """q: (B, S, H, hd); k/v: (B, T, KV, hd) with H % KV == 0.
+
+    Returns (B, S, H, hd).  GQA is handled by repeating K/V heads before
+    the kernel (the kernel itself is per-(batch*head)).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    to_bh = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, a.shape[1], hd)
+    out = flash_attention_bhsd(
+        to_bh(q), to_bh(k), to_bh(v), causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

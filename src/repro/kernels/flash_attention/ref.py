@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q/k/v: (BH, S, hd). Full-softmax reference."""
+    BH, S, hd = q.shape
+    T = k.shape[1]
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= kj <= qi
+    if window > 0:
+        ok &= kj > qi - window
+    s = jnp.where(ok, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", w, v.astype(jnp.float32)).astype(q.dtype)

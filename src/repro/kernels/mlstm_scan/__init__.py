@@ -1,0 +1,3 @@
+from repro.kernels.mlstm_scan.ops import mlstm_chunkwise
+
+__all__ = ["mlstm_chunkwise"]

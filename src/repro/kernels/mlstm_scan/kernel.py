@@ -1,0 +1,129 @@
+"""Chunkwise-parallel mLSTM recurrence (xLSTM) in Pallas.
+
+TPU adaptation of the xLSTM paper's fused CUDA recurrence: instead of a
+per-timestep sequential loop (VPU-bound, no MXU work), the sequence is
+processed in chunks of L timesteps.  Within a chunk the recurrence has a
+closed form:
+
+  lf_t = logsigmoid(f_t);  F_t = cumsum(lf)_t  (inclusive)
+  g_t  = cummax(i_s - F_s)_t
+  m_t  = F_t + max(m_prev, g_t)                       (stabilizer)
+  num_t = e^{F_t + m_prev - m_t} q_t C_prev
+        + sum_{s<=t} e^{F_t - F_s + i_s - m_t} (q_t.k_s) v_s
+  den_t = e^{F_t + m_prev - m_t} q_t.n_prev
+        + sum_{s<=t} e^{F_t - F_s + i_s - m_t} (q_t.k_s)
+  h_t  = num_t / max(|den_t|, e^{-m_t})
+
+so the inner sums become two (L,L)x(L,dh) matmuls on the MXU.  The grid is
+(batch*heads,); a fori_loop walks chunks carrying (C, n, m) in VREG/VMEM.
+Matches the sequential oracle (ref.py) to ~1e-5.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, c0_ref, n0_ref, m0_ref,
+                  h_ref, c1_ref, n1_ref, m1_ref, *, chunk, seq_len):
+    dh = q_ref.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+    n_chunks = seq_len // chunk
+
+    def body(ci, carry):
+        C, n, m = carry                                   # (dh,dh),(dh,),()
+        sl = (0, pl.ds(ci * chunk, chunk), slice(None))
+        q = pl.load(q_ref, sl)[...] * scale               # (L, dh)
+        k = pl.load(k_ref, sl)[...]
+        v = pl.load(v_ref, sl)[...]
+        ig = pl.load(i_ref, (0, pl.ds(ci * chunk, chunk)))[...]   # (L,)
+        fg = pl.load(f_ref, (0, pl.ds(ci * chunk, chunk)))[...]
+
+        lf = jax.nn.log_sigmoid(fg)
+        F = jnp.cumsum(lf)                                # inclusive (L,)
+        g = jax.lax.cummax(ig - F, axis=0)
+        m_t = F + jnp.maximum(m, g)                       # (L,)
+
+        # inter-chunk term
+        w_inter = jnp.exp(F + m - m_t)                    # (L,)
+        qC = jax.lax.dot_general(q, C, (((1,), (0,)), ((), ())))  # (L, dh)
+        num = w_inter[:, None] * qC
+        den = w_inter * jax.lax.dot_general(q, n[:, None],
+                                            (((1,), (0,)), ((), ())))[:, 0]
+
+        # intra-chunk term: W[t,s] = exp(F_t - F_s + i_s - m_t), s <= t
+        logw = (F - m_t)[:, None] + (ig - F)[None, :]     # (L, L)
+        t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+        logw = jnp.where(s_idx <= t_idx, logw, NEG_INF)
+        W = jnp.exp(logw)
+        S = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (L, L)
+        WS = W * S
+        num = num + jax.lax.dot_general(WS, v, (((1,), (0,)), ((), ())))
+        den = den + WS.sum(axis=1)
+
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[:, None]
+        pl.store(h_ref, sl, h.astype(h_ref.dtype))
+
+        # end-of-chunk state
+        m_last = m_t[-1]
+        w_state = jnp.exp((F[-1] - F) + ig - m_last)      # (L,)
+        C_new = jnp.exp(F[-1] + m - m_last) * C + jax.lax.dot_general(
+            k * w_state[:, None], v, (((0,), (0,)), ((), ())))
+        n_new = jnp.exp(F[-1] + m - m_last) * n + (k * w_state[:, None]).sum(0)
+        return C_new, n_new, m_last
+
+    C0 = c0_ref[0].astype(jnp.float32)
+    n0 = n0_ref[0].astype(jnp.float32)
+    m0 = m0_ref[0, 0]
+    C, n, m = jax.lax.fori_loop(0, n_chunks, body, (C0, n0, m0))
+    c1_ref[0] = C.astype(c1_ref.dtype)
+    n1_ref[0] = n.astype(n1_ref.dtype)
+    m1_ref[0, 0] = m
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunkwise_bh(q, k, v, i_pre, f_pre, C0, n0, m0, *, chunk=64,
+                       interpret=True):
+    """q/k/v: (BH, S, dh) f32; i/f: (BH, S); C0 (BH, dh, dh); n0 (BH, dh);
+    m0 (BH,).  Returns (h (BH, S, dh), C1, n1, m1)."""
+    BH, S, dh = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    m0_2d = m0[:, None]
+    kernel = functools.partial(_mlstm_kernel, chunk=chunk, seq_len=S)
+    h, C1, n1, m1 = pl.pallas_call(
+        kernel,
+        grid=(BH,),
+        in_specs=[
+            pl.BlockSpec((1, S, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, S, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, S, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, S), lambda b: (b, 0)),
+            pl.BlockSpec((1, S), lambda b: (b, 0)),
+            pl.BlockSpec((1, dh, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, dh), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, dh, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, dh), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, dh), jnp.float32),
+            jax.ShapeDtypeStruct((BH, dh, dh), jnp.float32),
+            jax.ShapeDtypeStruct((BH, dh), jnp.float32),
+            jax.ShapeDtypeStruct((BH, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, i_pre, f_pre, C0, n0, m0_2d)
+    return h, C1, n1, m1[:, 0]

@@ -1,0 +1,26 @@
+"""Model-layout wrapper: (B, S, H, dh) + state dict <-> kernel layout."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.mlstm_scan.kernel import mlstm_chunkwise_bh
+
+
+def mlstm_chunkwise(q, k, v, i_pre, f_pre, state, *, chunk=64,
+                    interpret=True):
+    """q/k/v: (B, S, H, dh) f32; i/f: (B, S, H); state: {"C","n","m"}.
+
+    Returns (h (B, S, H, dh), new_state).
+    """
+    B, S, H, dh = q.shape
+    to_bh = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    to_bh2 = lambda a: a.transpose(0, 2, 1).reshape(B * H, S)
+    h, C1, n1, m1 = mlstm_chunkwise_bh(
+        to_bh(q), to_bh(k), to_bh(v), to_bh2(i_pre), to_bh2(f_pre),
+        state["C"].reshape(B * H, dh, dh), state["n"].reshape(B * H, dh),
+        state["m"].reshape(B * H), chunk=chunk, interpret=interpret)
+    h = h.reshape(B, H, S, dh).transpose(0, 2, 1, 3)
+    new_state = {"C": C1.reshape(B, H, dh, dh), "n": n1.reshape(B, H, dh),
+                 "m": m1.reshape(B, H)}
+    return h, new_state

@@ -1,0 +1,35 @@
+"""Sequential oracle for the chunkwise mLSTM kernel (same math as
+repro.models.ssm._mlstm_cell_seq, in (BH, S, dh) layout)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_ref(q, k, v, i_pre, f_pre, C0, n0, m0):
+    """q/k/v: (BH, S, dh); i/f: (BH, S). Returns (h, C1, n1, m1)."""
+    BH, S, dh = q.shape
+    scale = 1.0 / math.sqrt(dh)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        f_act = jnp.exp(logf + m - m_new)
+        i_act = jnp.exp(it - m_new)
+        C = f_act[:, None, None] * C + i_act[:, None, None] * (
+            kt[:, :, None] * vt[:, None, :])
+        n = f_act[:, None] * n + i_act[:, None] * kt
+        qs = qt * scale
+        num = jnp.einsum("bkv,bk->bv", C, qs)
+        den = jnp.abs(jnp.einsum("bk,bk->b", n, qs))
+        den = jnp.maximum(den, jnp.exp(-m_new))
+        return (C, n, m_new), num / den[:, None]
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, i_pre, f_pre))
+    (C, n, m), h = jax.lax.scan(step, (C0, n0, m0), xs)
+    return jnp.moveaxis(h, 0, 1), C, n, m

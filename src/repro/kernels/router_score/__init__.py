@@ -1,0 +1,3 @@
+from repro.kernels.router_score.ops import router_head, router_route
+
+__all__ = ["router_head", "router_route"]

@@ -1,0 +1,28 @@
+"""Public wrappers used by core.router / serving.engine."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.router_score.kernel import router_score_fused
+
+
+def router_head(emb, head_params, interpret=True):
+    """Predicted losses only (no constraints)."""
+    M = head_params["w2"].shape[1]
+    cvals = jnp.zeros((1, M), jnp.float32)
+    lam = jnp.zeros((emb.shape[0], 1), jnp.float32)
+    pred, _ = router_score_fused(emb, head_params["w1"], head_params["b1"],
+                                 head_params["w2"], head_params["b2"],
+                                 cvals, lam, interpret=interpret)
+    return pred
+
+
+def router_route(emb, head_params, constraints, lambdas, interpret=True):
+    """Full fused decision. constraints: (n_c, M) np/jnp; lambdas: (B, n_c)."""
+    pred, choice = router_score_fused(
+        emb, head_params["w1"], head_params["b1"], head_params["w2"],
+        head_params["b2"], jnp.asarray(constraints, jnp.float32),
+        jnp.asarray(lambdas, jnp.float32), interpret=interpret)
+    return pred, choice

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused routing head."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def router_score_ref(emb, w1, b1, w2, b2, cvals, lam):
+    emb = emb.astype(jnp.float32)
+    h = jax.nn.gelu(emb @ w1 + b1)
+    pred = jax.nn.softplus(h @ w2 + b2)
+    combined = pred + lam.astype(jnp.float32) @ cvals
+    return pred, jnp.argmin(combined, axis=1).astype(jnp.int32)

@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production mesh, record memory/cost/collective stats for §Roofline.
+
+MUST be run as its own process (the XLA_FLAGS line above executes before
+any jax import and forces 512 host devices).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.launch import hlo_stats
+from repro.launch.hlo_loops import loop_aware_totals
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import Roofline, active_params, model_flops
+from repro.launch.steps import PerfKnobs, build_step
+from repro.models.common import INPUT_SHAPES
+from repro.launch.specs import applicable
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# Per-(arch, shape) perf-knob overrides discovered during §Perf
+# (see scripts/hillclimb.py and EXPERIMENTS.md §Perf for the full log).
+KNOB_OVERRIDES: dict[tuple, PerfKnobs] = {
+    # h4_pure_tp: decode wants 256-way TP (weights never move; psum small
+    # activations) instead of FSDP re-gathers every token.
+    ("jamba-v0.1-52b", "decode_32k"): PerfKnobs(rule_overrides={
+        "embed": None, "mlp": ("model", "data"),
+        "heads": ("model", "data"), "kv_heads": ("model", "data"),
+        "inner": ("model", "data"), "vocab": ("model", "data"),
+        "capacity": None}),
+    # h2_kvheads_nofsdp: shard kv_heads (16 == mesh axis) instead of the
+    # cache seq dim; replicate 1GB of weights over 'data'.
+    ("qwen1.5-0.5b", "decode_32k"): PerfKnobs(rule_overrides={
+        "cache": None, "embed": None}),
+    # same pattern transfers to qwen2-moe (also 16 kv heads):
+    # t_mem -60%, t_coll -97%, peak 14.98GiB (fits)
+    ("qwen2-moe-a2.7b", "decode_32k"): PerfKnobs(rule_overrides={
+        "cache": None, "embed": None}),
+}
+
+
+def knobs_for(arch: str, shape: str) -> PerfKnobs:
+    if (arch, shape) in KNOB_OVERRIDES:
+        return KNOB_OVERRIDES[(arch, shape)]
+    cfg = get_config(arch)
+    arch = cfg.name  # canonical hyphen form
+    if shape == "train_4k":
+        # grad accumulation + grouped remat sized so train fits ~16GB HBM
+        if arch == "qwen2-vl-72b":
+            return PerfKnobs(microbatch=8, moment_dtype="bfloat16",
+                             unit_group=4)
+        if arch == "grok-1-314b":
+            return PerfKnobs(microbatch=8, moment_dtype="bfloat16",
+                             unit_group=4)
+        if arch == "jamba-v0.1-52b":
+            return PerfKnobs(microbatch=8, moment_dtype="bfloat16")
+        if arch == "starcoder2-15b":
+            return PerfKnobs(microbatch=4, unit_group=2)
+        if arch == "gemma3-4b":
+            return PerfKnobs(microbatch=8)
+        if arch == "xlstm-1.3b":
+            # mb8 shrinks chunkwise-mLSTM peak under the 16GB HBM budget
+            return PerfKnobs(microbatch=8, unit_group=2)
+        if arch in ("tinyllama-1.1b", "hubert-xlarge"):
+            return PerfKnobs(microbatch=2)
+        if arch == "qwen2-moe-a2.7b":
+            return PerfKnobs(microbatch=4)
+    return PerfKnobs()
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            knobs: PerfKnobs | None = None, save: bool = True,
+            tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag}
+    if not ok:
+        rec.update(status="SKIP", reason=reason)
+        if save:
+            _save(rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    knobs = knobs or knobs_for(arch, shape_name)
+    t0 = time.time()
+    try:
+        built = build_step(cfg, shape, mesh, knobs)
+        with mesh:
+            lowered = built.fn.lower(*built.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+    except Exception as e:  # noqa: BLE001 — record the failure verbatim
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+        if save:
+            _save(rec)
+        return rec
+
+    coll = hlo_stats.collective_stats(hlo)
+    # loop-aware accounting: cost_analysis() counts while bodies once,
+    # which undercounts scan-over-layers models by ~num_layers.
+    la = loop_aware_totals(hlo)
+    rl = Roofline(flops=la["dot_flops"], hbm_bytes=la["traffic_bytes"],
+                  collective_bytes=la["collective_bytes"])
+
+    n_chips = mesh.devices.size
+    # exact param count from the abstract params (arg 0 of every step)
+    total_params = sum(
+        int(x.size) for x in jax.tree.leaves(built.args[0]))
+    act = active_params(cfg, total_params)
+    mf = model_flops(cfg, shape, act)
+
+    rec.update(
+        status="OK",
+        knobs={"microbatch": knobs.microbatch,
+               "moment_dtype": knobs.moment_dtype, "remat": knobs.remat,
+               "attn_impl": knobs.attn_impl, "unit_group": knobs.unit_group,
+               "rule_overrides": knobs.rule_overrides},
+        n_chips=n_chips,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        total_params=total_params,
+        active_params=int(act),
+        memory={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+            "peak_bytes_per_device": (mem.argument_size_in_bytes
+                                      + mem.temp_size_in_bytes),
+        },
+        cost={k: float(v) for k, v in cost.items()
+              if isinstance(v, (int, float))},
+        loop_aware=la,
+        collectives=coll,
+        roofline=rl.as_dict(),
+        model_flops_global=mf,
+        model_flops_per_chip=mf / n_chips,
+        useful_flops_frac=((mf / n_chips) / la["dot_flops"]
+                           if la["dot_flops"] else None),
+    )
+    if save:
+        _save(rec)
+    return rec
+
+
+def _save(rec):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    tag = f"_{rec['tag']}" if rec.get("tag") else ""
+    path = os.path.join(
+        OUT_DIR, f"{rec['arch']}_{rec['shape']}_{rec['mesh']}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    if args.arch:
+        from repro.configs import _ALIASES
+        archs = [a if a in _ALIASES else a for a in archs]
+
+    results = []
+    for a in archs:
+        for s in shapes:
+            t0 = time.time()
+            rec = run_one(a, s, args.mesh, tag=args.tag)
+            dt = time.time() - t0
+            status = rec["status"]
+            extra = ""
+            if status == "OK":
+                extra = (f"dom={rec['roofline']['dominant']} "
+                         f"peak={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB "
+                         f"compile={rec['compile_s']}s")
+            elif status == "FAIL":
+                extra = rec["error"][:160]
+            else:
+                extra = rec["reason"][:90]
+            print(f"[{status:4s}] {a:18s} {s:12s} {args.mesh:8s} "
+                  f"({dt:6.1f}s) {extra}", flush=True)
+            results.append(rec)
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"] == "SKIP" for r in results)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"done: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

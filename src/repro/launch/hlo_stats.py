@@ -1,0 +1,70 @@
+"""Parse compiled HLO text for roofline inputs.
+
+``cost_analysis()`` gives FLOPs / bytes-accessed but NOT collective
+traffic; we recover it by summing the output-operand sizes of every
+collective op in the post-SPMD (per-device) module.  All numbers here are
+therefore per-chip.
+"""
+
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g. "bf16[16,4096,512]{2,1,0}"
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# start of an HLO instruction: "  %name = <shape-or-tuple> opcode(" — opcode
+# may be "all-reduce-start" etc.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.MULTILINE)
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-collective-kind output bytes + op counts (per device)."""
+    out = {k: {"bytes": 0, "count": 0} for k in COLLECTIVES}
+    seen_done = set()
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_text, kind = m.group(1), m.group(2)
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        # async pairs appear as -start/-done; count each logical op once
+        if "-done(" in line:
+            continue
+        out[kind]["bytes"] += _shape_bytes(shape_text)
+        out[kind]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def op_histogram(hlo_text: str, top=25) -> dict:
+    ops = re.findall(r"=\s*(?:\w+\[[^\]]*\]\S*\s+)+([a-z][\w\-]*)\(", hlo_text)
+    hist: dict[str, int] = {}
+    for o in ops:
+        hist[o] = hist.get(o, 0) + 1
+    return dict(sorted(hist.items(), key=lambda kv: -kv[1])[:top])

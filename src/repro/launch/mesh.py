@@ -1,0 +1,23 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never touches
+jax device state.  Single pod = 16x16 (256 chips, TPU v5e); multi-pod adds
+a leading "pod" axis (2 pods = 512 chips), over which only the batch /
+fsdp dimensions shard (the pod axis crosses DCN, so we keep per-layer
+tensor collectives off it).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (CPU tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))

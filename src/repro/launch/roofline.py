@@ -1,0 +1,83 @@
+"""Three-term roofline model from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs / peak_FLOPs_per_chip
+    memory     = HLO_bytes / HBM_bw_per_chip
+    collective = collective_bytes / (links * link_bw)
+
+All inputs are per-chip (cost_analysis and the parsed HLO are post-SPMD).
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (v5e: ~4 usable links/chip,
+ICI_LINKS = 1                # conservatively count 1 link serializing all
+                             # collective traffic (worst case)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+
+    @property
+    def t_compute(self):
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.collective_bytes / (ICI_BW * ICI_LINKS)
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self):
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self):
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+        }
+
+
+def model_flops(cfg, shape, params_active: float) -> float:
+    """6·N·D reference FLOPs (N = active params, D = tokens) — global."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * params_active * tokens
+    # decode: one token per sequence
+    return 2.0 * params_active * shape.global_batch
+
+
+def active_params(cfg, total_params: float) -> float:
+    """Active (per-token) parameter count for MoE archs."""
+    if cfg.moe is None:
+        return total_params
+    m = cfg.moe
+    dff = m.d_ff_expert or cfg.d_ff
+    per_expert = 3 * cfg.d_model * dff
+    n_layers_moe = sum(cfg.moe_pattern) * (cfg.num_layers // len(cfg.moe_pattern))
+    inactive = per_expert * (m.num_experts - m.top_k) * n_layers_moe
+    return total_params - inactive

@@ -1,0 +1,71 @@
+"""Serving driver: bring up a TryageEngine over the trained library and
+push batched requests through it (the paper's kind of end-to-end driver).
+
+  PYTHONPATH=src python -m repro.launch.serve --requests 256 [--fast]
+
+Loads artifacts from experiments/tryage if present, otherwise trains a
+reduced library first.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    from repro.core import experiment as ex
+    from repro.core.objective import recency_constraint, size_constraint
+    from repro.data.batching import mlm_batch
+    from repro.serving import Request, TryageEngine
+
+    try:
+        art = ex.load_artifacts()
+    except FileNotFoundError:
+        print("no artifacts; running reduced experiment first", flush=True)
+        xc = ex.ExperimentConfig(expert_steps=60, n_train_prompts=512,
+                                 n_val_prompts=128, n_test_per_domain=24,
+                                 router_epochs=3)
+        ex.run_experiment(xc, verbose=True)
+        art = ex.load_artifacts()
+
+    lib, rp, rc, corpus = (art["library"], art["router_params"], art["rc"],
+                           art["corpus"])
+    eng = TryageEngine(lib, rp, rc,
+                       [size_constraint(lib), recency_constraint(lib)],
+                       max_batch=args.max_batch)
+
+    rng = np.random.default_rng(0)
+    uniform = {d: 1.0 / 8 for d in corpus.tables}
+    toks, doms = corpus.sample_mixture(uniform, args.requests, args.seq, rng)
+    mb = mlm_batch(toks, rng, 0.15, corpus.vocab_size)
+    flag_mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
+    for i in range(args.requests):
+        eng.submit(Request(uid=i, tokens=mb["tokens"][i],
+                           targets=mb["targets"][i], mask=mb["mask"][i],
+                           lambdas=flag_mix[i % len(flag_mix)]))
+    t0 = time.time()
+    results = eng.run()
+    dt = time.time() - t0
+    accs = [r.accuracy for r in results if r.accuracy is not None]
+    print(json.dumps({
+        "requests": len(results),
+        "wall_s": round(dt, 2),
+        "req_per_s": round(len(results) / dt, 1),
+        "mean_mlm_accuracy": round(float(np.mean(accs)), 4),
+        "engine": eng.stats.summary(),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) pair.
+
+``input_specs`` returns abstract inputs only — no device allocation — so
+full-size 314B-parameter configs can be lowered on a CPU host.  For VLM /
+audio architectures the modality frontend is stubbed per the assignment:
+train/prefill consume precomputed patch/frame embeddings of the right
+shape; decode consumes text token ids.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import InputShape, ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Whether this (arch, shape) pair runs, and the skip reason if not."""
+    if shape.kind == "decode" and cfg.is_encoder:
+        return False, "encoder-only architecture has no decode step"
+    if shape.name == "long_500k":
+        sub_quadratic = cfg.family in ("ssm", "hybrid") or (
+            cfg.attn.sliding_window > 0)
+        if not sub_quadratic:
+            return False, ("pure full-attention architecture; 500k decode "
+                           "requires sub-quadratic attention")
+    return True, ""
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape):
+    """Abstract train/prefill batch for this arch."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.jnp_dtype
+    if cfg.family in ("vlm", "audio"):
+        batch = {"embeds": SDS((B, S, cfg.d_model), dt),
+                 "targets": SDS((B, S), jnp.int32),
+                 "mask": SDS((B, S), jnp.int32)}
+    else:
+        batch = {"tokens": SDS((B, S), jnp.int32),
+                 "mask": SDS((B, S), jnp.int32)}
+    return batch
+
+
+def batch_logical(cfg: ModelConfig, shape: InputShape):
+    if cfg.family in ("vlm", "audio"):
+        return {"embeds": ("batch", "seq", "act_embed"),
+                "targets": ("batch", "seq"), "mask": ("batch", "seq")}
+    return {"tokens": ("batch", "seq"), "mask": ("batch", "seq")}
+
+
+def decode_token_specs(cfg: ModelConfig, shape: InputShape):
+    return {"tokens": SDS((shape.global_batch, 1), jnp.int32)}
+
+
+def decode_token_logical(cfg: ModelConfig):
+    return {"tokens": ("batch", "seq")}

@@ -1,0 +1,214 @@
+"""Step builders: produce (jitted fn, abstract args, shardings) for every
+(arch x input-shape x mesh) combination.
+
+All three step kinds are built from abstract shapes only; ``.lower()`` +
+``.compile()`` on them is the multi-pod dry-run.  The same builders drive
+the real CPU-scale training/serving paths (with concrete arrays).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import specs as specs_lib
+from repro.models import model as model_lib
+from repro.models.common import InputShape, ModelConfig
+from repro.optim import adamw_init, adamw_update
+from repro.sharding import (DEFAULT_RULES, MULTIPOD_RULES, LogicalRules,
+                            activation_sharding, tree_logical_to_spec)
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class PerfKnobs:
+    """Tunables iterated during the §Perf hillclimb."""
+    microbatch: int = 1
+    moment_dtype: str = "float32"
+    remat: bool = True
+    attn_impl: str = "xla"
+    unit_group: int = 1      # sqrt-depth remat: boundaries every g units
+    # extra logical-rule overrides, e.g. {"expert": ("data", "model")}
+    rule_overrides: dict | None = None
+    donate: bool = True
+
+
+def rules_for(mesh, knobs: PerfKnobs | None = None) -> LogicalRules:
+    base = MULTIPOD_RULES if "pod" in mesh.axis_names else DEFAULT_RULES
+    if knobs and knobs.rule_overrides:
+        return LogicalRules(rules={**base.rules, **knobs.rule_overrides})
+    return base
+
+
+def _opt_logical(params_logical):
+    return {"step": (), "mu": params_logical, "nu": params_logical}
+
+
+def _spec_tree(mesh, logical, shapes, rules):
+    return tree_logical_to_spec(mesh, logical, shapes, rules)
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any                  # jitted
+    args: tuple              # abstract ShapeDtypeStructs
+    in_specs: tuple
+    arg_names: tuple
+
+
+def _opt_state_abstract(params_abs, moment_dtype):
+    mu = jax.tree.map(lambda p: SDS(p.shape, jnp.dtype(moment_dtype)), params_abs)
+    nu = jax.tree.map(lambda p: SDS(p.shape, jnp.dtype(moment_dtype)), params_abs)
+    return {"step": SDS((), jnp.int32), "mu": mu, "nu": nu}
+
+
+def build_train_step(cfg: ModelConfig, shape: InputShape, mesh,
+                     knobs: PerfKnobs = PerfKnobs(), lr=5e-5):
+    rules = rules_for(mesh, knobs)
+    params_abs, logical = model_lib.init_model_logical(cfg)
+    batch_abs = specs_lib.batch_specs(cfg, shape)
+    batch_log = specs_lib.batch_logical(cfg, shape)
+
+    n_micro = knobs.microbatch
+    moment_dt = jnp.dtype(knobs.moment_dtype)
+
+    def loss_fn(p, b):
+        return model_lib.lm_loss(p, cfg, b, remat=knobs.remat,
+                                 attn_impl=knobs.attn_impl,
+                                 unit_group=knobs.unit_group)
+
+    def train_step(params, opt, batch):
+      with activation_sharding(mesh, rules):
+        if n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(b):
+                return jax.tree.map(
+                    lambda a: a.reshape((n_micro, a.shape[0] // n_micro)
+                                        + a.shape[1:]), b)
+            mb = micro(batch)
+
+            def acc_body(carry, b):
+                acc, loss_acc = carry
+                (loss, _m), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, b)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(a.dtype), acc, g)
+                return (acc, loss_acc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            metrics = {}
+        new_params, new_opt = adamw_update(params, grads, _OptShim(opt),
+                                           lr=lr, weight_decay=1e-5)
+        return new_params, _opt_as_dict(new_opt), loss
+
+    # shardings ------------------------------------------------------
+    p_specs = _spec_tree(mesh, logical, params_abs, rules)
+    opt_abs = _opt_state_abstract(params_abs, moment_dt)
+    opt_specs = {"step": P(), "mu": p_specs, "nu": p_specs}
+    b_specs = _spec_tree(mesh, batch_log, batch_abs, rules)
+    in_specs = (p_specs, opt_specs, b_specs)
+    out_specs = (p_specs, opt_specs, P())
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), in_specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    out_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), out_specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+    fn = jax.jit(train_step, in_shardings=shardings,
+                 out_shardings=out_shardings,
+                 donate_argnums=(0, 1) if knobs.donate else ())
+    return BuiltStep(fn=fn, args=(params_abs, opt_abs, batch_abs),
+                     in_specs=in_specs, arg_names=("params", "opt", "batch"))
+
+
+class _OptShim:
+    """Adapt dict opt-state to the OptState attribute interface."""
+
+    def __init__(self, d):
+        self.step, self.mu, self.nu = d["step"], d["mu"], d["nu"]
+
+
+def _opt_as_dict(o):
+    return {"step": o.step, "mu": o.mu, "nu": o.nu}
+
+
+def build_prefill_step(cfg: ModelConfig, shape: InputShape, mesh,
+                       knobs: PerfKnobs = PerfKnobs()):
+    rules = rules_for(mesh, knobs)
+    params_abs, logical = model_lib.init_model_logical(cfg)
+    batch_abs = specs_lib.batch_specs(cfg, shape)
+    batch_abs.pop("targets", None), batch_abs.pop("mask", None)
+    batch_log = {k: v for k, v in specs_lib.batch_logical(cfg, shape).items()
+                 if k in batch_abs}
+
+    def prefill_step(params, batch):
+        with activation_sharding(mesh, rules):
+            logits, state = model_lib.prefill(params, cfg, batch,
+                                              attn_impl=knobs.attn_impl)
+            return logits[:, -1].astype(jnp.float32), state
+
+    p_specs = _spec_tree(mesh, logical, params_abs, rules)
+    b_specs = _spec_tree(mesh, batch_log, batch_abs, rules)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                             (p_specs, b_specs),
+                             is_leaf=lambda x: isinstance(x, P))
+    fn = jax.jit(prefill_step, in_shardings=shardings)
+    return BuiltStep(fn=fn, args=(params_abs, batch_abs),
+                     in_specs=(p_specs, b_specs), arg_names=("params", "batch"))
+
+
+def build_decode_step(cfg: ModelConfig, shape: InputShape, mesh,
+                      knobs: PerfKnobs = PerfKnobs()):
+    rules = rules_for(mesh, knobs)
+    params_abs, logical = model_lib.init_model_logical(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    state_abs = jax.eval_shape(
+        lambda: model_lib.init_decode_state(cfg, B, S))
+    state_log = model_lib.decode_state_logical(cfg)
+    tok_abs = specs_lib.decode_token_specs(cfg, shape)
+    tok_log = specs_lib.decode_token_logical(cfg)
+
+    def serve_step(params, state, tok, index):
+        with activation_sharding(mesh, rules):
+            logits, new_state = model_lib.decode_step(
+                params, cfg, tok, state, index, attn_impl=knobs.attn_impl)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            return next_tok, new_state
+
+    p_specs = _spec_tree(mesh, logical, params_abs, rules)
+    s_specs = _spec_tree(mesh, state_log, state_abs, rules)
+    t_specs = _spec_tree(mesh, tok_log, tok_abs, rules)
+    in_specs = (p_specs, s_specs, t_specs, P())
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), in_specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    out_shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        (t_specs["tokens"], s_specs), is_leaf=lambda x: isinstance(x, P))
+    fn = jax.jit(serve_step, in_shardings=shardings,
+                 out_shardings=out_shardings,
+                 donate_argnums=(1,) if knobs.donate else ())
+    args = (params_abs, state_abs, tok_abs, SDS((), jnp.int32))
+    return BuiltStep(fn=fn, args=args, in_specs=in_specs,
+                     arg_names=("params", "state", "tokens", "index"))
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh,
+               knobs: PerfKnobs = PerfKnobs()):
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, knobs)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, knobs)
+    if shape.kind == "decode":
+        return build_decode_step(cfg, shape, mesh, knobs)
+    raise ValueError(shape.kind)

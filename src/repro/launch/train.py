@@ -1,0 +1,107 @@
+"""Training driver.
+
+Two modes:
+  --arch <id>         train a REDUCED variant of an assigned architecture on
+                      the synthetic corpus for N steps on the host devices
+                      (CPU-scale integration of the exact production
+                      train_step path: same builders, same sharding rules,
+                      host mesh instead of the 16x16 pod).
+  --tryage            run the full Tryage pipeline (experts + router),
+                      i.e. the paper's training recipe end-to-end.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b --steps 20
+  PYTHONPATH=src python -m repro.launch.train --tryage --fast
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+
+def train_arch(arch: str, steps: int, batch: int, seq: int, verbose=True):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.data.batching import clm_batch, mlm_batch
+    from repro.data.corpus import DomainCorpus
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import PerfKnobs, build_train_step
+    from repro.models.common import InputShape
+    from repro.models.model import init_model
+    from repro.optim import adamw_init
+
+    cfg = get_config(arch).reduced()
+    shape = InputShape(name="host", seq_len=seq, global_batch=batch,
+                       kind="train")
+    mesh = make_host_mesh(1, 1)
+    built = build_train_step(cfg, shape, mesh, PerfKnobs(donate=False),
+                             lr=1e-3)
+
+    key = jax.random.PRNGKey(0)
+    params, _ = init_model(key, cfg)
+    opt = adamw_init(params)
+    opt = {"step": opt.step, "mu": opt.mu, "nu": opt.nu}
+    corpus = DomainCorpus(vocab_size=cfg.vocab_size)
+    rng = np.random.default_rng(0)
+    uniform = {d: 1.0 / 8 for d in corpus.tables}
+
+    losses = []
+    with mesh:
+        for i in range(steps):
+            toks, _lab = corpus.sample_mixture(uniform, batch, seq, rng)
+            toks = np.clip(toks, 0, cfg.vocab_size - 1)
+            if cfg.is_encoder or cfg.family in ("vlm", "audio"):
+                mb = mlm_batch(toks, rng, 0.15, cfg.vocab_size)
+                batch_in = {
+                    "embeds": jnp.asarray(
+                        rng.standard_normal((batch, seq, cfg.d_model)),
+                        jnp.float32),
+                    "targets": jnp.asarray(mb["targets"]),
+                    "mask": jnp.asarray(mb["mask"])}
+                if cfg.family not in ("vlm", "audio"):
+                    batch_in["tokens"] = jnp.asarray(mb["tokens"])
+            else:
+                batch_in = {"tokens": jnp.asarray(toks),
+                            "mask": jnp.ones((batch, seq), jnp.int32)}
+            params, opt, loss = built.fn(params, opt, batch_in)
+            losses.append(float(loss))
+            if verbose and (i % 5 == 0 or i == steps - 1):
+                print(f"  {arch} step {i}: loss {float(loss):.4f}", flush=True)
+    assert np.isfinite(losses).all(), "NaN loss"
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--tryage", action="store_true")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    if args.tryage:
+        from repro.core.experiment import ExperimentConfig, run_experiment
+        xc = ExperimentConfig()
+        if args.fast:
+            xc = ExperimentConfig(expert_steps=60, n_train_prompts=512,
+                                  n_val_prompts=128, n_test_per_domain=24,
+                                  router_epochs=3)
+        run_experiment(xc)
+        return
+    assert args.arch, "--arch or --tryage required"
+    t0 = time.time()
+    losses = train_arch(args.arch, args.steps, args.batch, args.seq)
+    print(f"{args.arch}: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({time.time()-t0:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

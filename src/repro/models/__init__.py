@@ -1,0 +1,12 @@
+from repro.models.common import (AttnConfig, InputShape, INPUT_SHAPES,
+                                 ModelConfig, MoEConfig, SSMConfig)
+from repro.models.model import (count_params, cross_entropy, decode_step,
+                                forward, init_decode_state, init_model,
+                                lm_loss, prefill, decode_state_logical)
+
+__all__ = [
+    "AttnConfig", "InputShape", "INPUT_SHAPES", "ModelConfig", "MoEConfig",
+    "SSMConfig", "count_params", "cross_entropy", "decode_step", "forward",
+    "init_decode_state", "init_model", "lm_loss", "prefill",
+    "decode_state_logical",
+]

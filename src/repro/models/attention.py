@@ -1,0 +1,224 @@
+"""Grouped-query attention: full-sequence (train/prefill) and cached decode.
+
+Memory discipline: scores are never materialized at (S, T) — the query axis
+is processed in chunks via lax.scan, so the transient is (B, H, chunk, T).
+GQA is implemented by locally repeating K/V to the full head count *after*
+projection; the head axis stays sharded over the ``model`` mesh axis and the
+repeat lowers to a local slice per shard (no resharding).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import AttnConfig, ModelConfig
+from repro.models.layers import _init, apply_rope, apply_mrope
+from repro.sharding.context import shard_act
+
+NEG_INF = -2.3819763e38  # close to f32 min, safe in exp
+
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    d, H, KV = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": _init(ks[0], (d, H, hd), s, dtype),
+        "wk": _init(ks[1], (d, KV, hd), s, dtype),
+        "wv": _init(ks[2], (d, KV, hd), s, dtype),
+        "wo": _init(ks[3], (H, hd, d), 1.0 / math.sqrt(H * hd), dtype),
+    }
+    l = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.attn.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype=dtype)
+        p["bk"] = jnp.zeros((KV, hd), dtype=dtype)
+        p["bv"] = jnp.zeros((KV, hd), dtype=dtype)
+        l["bq"] = ("heads", "head_dim")
+        l["bk"] = ("kv_heads", "head_dim")
+        l["bv"] = ("kv_heads", "head_dim")
+    return p, l
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    q = jnp.einsum("...d,dhk->...hk", x, p["wq"])
+    k = jnp.einsum("...d,dhk->...hk", x, p["wk"])
+    v = jnp.einsum("...d,dhk->...hk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    a = cfg.attn
+    if a.use_mrope:
+        q = apply_mrope(q, positions, a.mrope_sections, a.rope_theta)
+        k = apply_mrope(k, positions, a.mrope_sections, a.rope_theta)
+    elif a.rope_theta > 0:
+        q = apply_rope(q, positions, a.rope_theta)
+        k = apply_rope(k, positions, a.rope_theta)
+    q = shard_act(q, ("batch", "seq", "heads", "head_dim"))
+    k = shard_act(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = shard_act(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def _repeat_kv(k, v, H):
+    KV = k.shape[2]
+    if KV == H:
+        return k, v
+    G = H // KV
+    rep = lambda a: jnp.repeat(a, G, axis=2)
+    return rep(k), rep(v)
+
+
+def _pick_q_chunk(S, target=1024):
+    c = min(S, target)
+    while S % c:
+        c -= 1
+    return c
+
+
+def _sdpa_chunked(q, k, v, bias_fn, softcap=0.0, q_chunk=1024):
+    """q: (B,S,H,hd); k/v: (B,T,H,hd) (already head-repeated).
+
+    ``bias_fn(q_offset, q_len)`` -> (q_len, T) additive f32 bias, computed
+    per chunk so the (S, T) mask never materializes.
+    """
+    B, S, H, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+
+    def block(qb, offset):
+        logits = jnp.einsum("bshd,bthd->bhst", qb, k).astype(jnp.float32)
+        logits = shard_act(logits, ("batch", "heads", "seq", "seq"))
+        logits = logits * scale
+        if softcap > 0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        logits = logits + bias_fn(offset, qb.shape[1])
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhst,bthd->bshd", w.astype(v.dtype), v)
+        return shard_act(out, ("batch", "seq", "heads", "head_dim"))
+
+    ck = _pick_q_chunk(S, q_chunk)
+    if ck == S:
+        return block(q, 0)
+    n = S // ck
+    qs = jnp.moveaxis(q.reshape(B, n, ck, H, hd), 1, 0)
+
+    def body(_, xs):
+        i, qb = xs
+        return None, block(qb, i * ck)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(n), qs))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+
+def attend_full(p, x, cfg: ModelConfig, positions, window=0, impl="xla"):
+    """Full-sequence attention for train/prefill. Returns (out, (k, v))."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    a = cfg.attn
+    S = x.shape[-2]
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(
+            q, k, v, causal=a.causal, window=window, softcap=a.softcap)
+    else:
+        kr, vr = _repeat_kv(k, v, cfg.num_heads)
+
+        def bias_fn(offset, q_len):
+            qi = jnp.arange(q_len)[:, None] + offset
+            kj = jnp.arange(S)[None, :]
+            ok = jnp.ones((q_len, S), bool)
+            if a.causal:
+                ok &= kj <= qi
+            if window > 0:
+                ok &= kj > qi - window
+            return jnp.where(ok, 0.0, NEG_INF)
+
+        out = _sdpa_chunked(q, kr, vr, bias_fn, a.softcap)
+    y = jnp.einsum("...hk,hkd->...d", out, p["wo"])
+    return y, (k, v)
+
+
+def init_kv_cache(batch, max_len, cfg: ModelConfig, dtype):
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (batch, max_len, KV, hd)
+    return {"k": jnp.zeros(shape, dtype=dtype), "v": jnp.zeros(shape, dtype=dtype)}
+
+
+KV_CACHE_LOGICAL = {"k": ("batch", "cache", "kv_heads", "head_dim"),
+                    "v": ("batch", "cache", "kv_heads", "head_dim")}
+
+
+def prefill_cache_from_kv(k, v, window, dtype, capacity=None):
+    """Convert prefill-computed (B,S,KV,hd) k/v into the decode ring cache.
+
+    ``capacity`` (default S) is the allocated cache length for non-window
+    layers; pass S + max_new_tokens when decoding will continue.  For
+    window layers the cache is the ring of ``window`` slots with the
+    invariant slot == abs_pos % window.
+    """
+    S = k.shape[1]
+    if window <= 0:
+        cap = capacity or S
+        if cap > S:
+            pad = [(0, 0), (0, cap - S), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return {"k": k.astype(dtype), "v": v.astype(dtype)}
+    if S <= window:
+        if S < window:
+            pad = [(0, 0), (0, window - S), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return {"k": k.astype(dtype), "v": v.astype(dtype)}
+    k, v = k[:, -window:], v[:, -window:]
+    shift = S % window
+    return {"k": jnp.roll(k, shift, axis=1).astype(dtype),
+            "v": jnp.roll(v, shift, axis=1).astype(dtype)}
+
+
+def attend_decode(p, x, cache, index, cfg: ModelConfig, positions, window=0):
+    """Single-token decode against a (ring-buffer) KV cache.
+
+    x: (B, 1, d); cache k/v: (B, T, KV, hd); ``index`` is the absolute
+    position of the new token.  Sliding-window layers allocate T == window
+    and wrap; RoPE is applied at write time so ring scrambling is harmless
+    (softmax is order-invariant, validity is masked from absolute indices).
+    """
+    q, k1, v1 = _project_qkv(p, x, cfg, positions)
+    T = cache["k"].shape[1]
+    write = jnp.mod(index, T)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k1.astype(cache["k"].dtype), write, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v1.astype(cache["v"].dtype), write, axis=1)
+    new_cache = {"k": k, "v": v}
+    kr, vr = _repeat_kv(k, v, cfg.num_heads)
+
+    def bias_fn(offset, q_len):
+        kj = jnp.arange(T)[None, :]
+        ok = (kj <= index) | (index >= T)
+        if 0 < window < T:
+            ok &= kj > index - window
+        return jnp.where(ok, 0.0, NEG_INF)
+
+    out = _sdpa_chunked(q, kr, vr, bias_fn, cfg.attn.softcap)
+    y = jnp.einsum("...hk,hkd->...d", out, p["wo"])
+    return y, new_cache
+
+
+def layer_window(cfg: ModelConfig, layer_idx: int) -> int:
+    """Resolve sliding-window size for a given layer under the config pattern."""
+    a = cfg.attn
+    if a.sliding_window <= 0:
+        return 0
+    if a.window_pattern == "all_local":
+        return a.sliding_window
+    if a.window_pattern == "gemma":
+        return 0 if (layer_idx % a.global_every == a.global_every - 1) else a.sliding_window
+    if a.window_pattern == "starcoder_swa":
+        return a.sliding_window
+    return 0

@@ -1,0 +1,171 @@
+"""Per-layer blocks (attn / mamba / mlstm / slstm, dense-MLP or MoE) and the
+repeating-unit machinery that lets heterogeneous interleaves (Jamba, xLSTM,
+Gemma-3 local:global) compile as a single lax.scan over units."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import ModelConfig
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+from repro.models.moe import apply_moe, init_moe
+from repro.sharding.context import shard_act
+
+
+def _has_mlp(cfg: ModelConfig) -> bool:
+    return cfg.d_ff > 0
+
+
+def init_block(key, cfg: ModelConfig, kind: str, use_moe: bool, dtype):
+    ks = jax.random.split(key, 4)
+    p, l = {}, {}
+    p["norm1"], l["norm1"] = init_norm(cfg.d_model, dtype, cfg.norm_kind)
+    if kind == "attn":
+        p["mix"], l["mix"] = attn_lib.init_attention(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mix"], l["mix"] = ssm_lib.init_mamba(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["mix"], l["mix"] = ssm_lib.init_mlstm(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["mix"], l["mix"] = ssm_lib.init_slstm(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if _has_mlp(cfg):
+        p["norm2"], l["norm2"] = init_norm(cfg.d_model, dtype, cfg.norm_kind)
+        if use_moe:
+            p["mlp"], l["mlp"] = init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"], l["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype, cfg.act)
+    return p, l
+
+
+def init_block_state(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                     dtype, layer_idx: int = 0):
+    """Decode-time recurrent state / KV cache for one layer.
+
+    Sliding-window layers get a ring buffer of ``min(window, cache_len)``
+    slots — this is what makes 500k-context decode of local-attention
+    architectures memory-feasible.
+    """
+    if kind == "attn":
+        window = attn_lib.layer_window(cfg, layer_idx)
+        if window > 0:
+            cache_len = min(cache_len, window)
+        return attn_lib.init_kv_cache(batch, cache_len, cfg, dtype)
+    if kind == "mamba":
+        return ssm_lib.init_mamba_state(batch, cfg, dtype)
+    if kind == "mlstm":
+        return ssm_lib.init_mlstm_state(batch, cfg)
+    if kind == "slstm":
+        return ssm_lib.init_slstm_state(batch, cfg)
+    raise ValueError(kind)
+
+
+def block_state_logical(kind: str):
+    if kind == "attn":
+        return attn_lib.KV_CACHE_LOGICAL
+    if kind == "mamba":
+        return ssm_lib.MAMBA_STATE_LOGICAL
+    if kind == "mlstm":
+        return ssm_lib.MLSTM_STATE_LOGICAL
+    if kind == "slstm":
+        return ssm_lib.SLSTM_STATE_LOGICAL
+    raise ValueError(kind)
+
+
+def apply_block(p, x, cfg: ModelConfig, kind: str, use_moe: bool, *,
+                mode: str, layer_idx: int, positions, state=None, index=None,
+                attn_impl: str = "xla", cache_capacity=None):
+    """Returns (x, new_state, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["norm1"], x, cfg.norm_eps, cfg.norm_kind)
+
+    if kind == "attn":
+        window = attn_lib.layer_window(cfg, layer_idx)
+        if mode == "decode":
+            y, new_state = attn_lib.attend_decode(
+                p["mix"], h, state, index, cfg, positions, window)
+        else:
+            y, kv = attn_lib.attend_full(
+                p["mix"], h, cfg, positions, window, impl=attn_impl)
+            new_state = state
+            if mode == "prefill":
+                new_state = attn_lib.prefill_cache_from_kv(
+                    kv[0], kv[1], window, cfg.jnp_dtype,
+                    capacity=cache_capacity)
+    elif kind == "mamba":
+        if mode == "decode":
+            y, new_state = ssm_lib.mamba_step(p["mix"], h, state, cfg)
+        else:
+            y, new_state = ssm_lib.mamba_full(p["mix"], h, cfg, state=None)
+    elif kind == "mlstm":
+        if mode == "decode":
+            y, new_state = ssm_lib.mlstm_step(p["mix"], h, state, cfg)
+        else:
+            y, new_state = ssm_lib.mlstm_full(p["mix"], h, cfg, state=None)
+    elif kind == "slstm":
+        if mode == "decode":
+            y, new_state = ssm_lib.slstm_step(p["mix"], h, state, cfg)
+        else:
+            y, new_state = ssm_lib.slstm_full(p["mix"], h, cfg, state=None)
+    else:
+        raise ValueError(kind)
+
+    x = shard_act(x + y.astype(x.dtype), ("batch", "seq", "act_embed"))
+
+    if _has_mlp(cfg):
+        h2 = apply_norm(p["norm2"], x, cfg.norm_eps, cfg.norm_kind)
+        if use_moe:
+            y2, aux = apply_moe(p["mlp"], h2, cfg)
+        else:
+            y2 = apply_mlp(p["mlp"], h2, cfg.act)
+        x = shard_act(x + y2.astype(x.dtype), ("batch", "seq", "act_embed"))
+
+    if mode in ("train", "encode"):
+        new_state = None
+    return x, new_state, aux
+
+
+# --------------------------------------------------------------- units
+
+def init_unit(key, cfg: ModelConfig, dtype):
+    """One repeating unit: dict 'l{j}' -> block params."""
+    pat, moes = cfg.layer_pattern, cfg.moe_pattern
+    ks = jax.random.split(key, len(pat))
+    p, l = {}, {}
+    for j, kind in enumerate(pat):
+        p[f"l{j}"], l[f"l{j}"] = init_block(ks[j], cfg, kind, moes[j], dtype)
+    return p, l
+
+
+def init_unit_state(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    return {f"l{j}": init_block_state(cfg, kind, batch, cache_len, dtype,
+                                      layer_idx=j)
+            for j, kind in enumerate(cfg.layer_pattern)}
+
+
+def unit_state_logical(cfg: ModelConfig):
+    return {f"l{j}": block_state_logical(kind)
+            for j, kind in enumerate(cfg.layer_pattern)}
+
+
+def apply_unit(p, x, cfg: ModelConfig, *, unit_base_layer, mode, positions,
+               state=None, index=None, attn_impl="xla", cache_capacity=None):
+    """Apply every block in one unit sequentially."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_state = {}
+    for j, kind in enumerate(cfg.layer_pattern):
+        st = state[f"l{j}"] if state is not None else None
+        x, st2, aux = apply_block(
+            p[f"l{j}"], x, cfg, kind, cfg.moe_pattern[j],
+            mode=mode, layer_idx=unit_base_layer + j, positions=positions,
+            state=st, index=index, attn_impl=attn_impl,
+            cache_capacity=cache_capacity)
+        new_state[f"l{j}"] = st2
+        aux_total = aux_total + aux
+    if mode in ("train", "encode"):
+        new_state = None
+    return x, new_state, aux_total

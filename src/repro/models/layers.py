@@ -1,0 +1,148 @@
+"""Functional NN primitives.
+
+Every ``init_*`` returns ``(params, logical)`` where ``logical`` mirrors
+``params`` leaf-for-leaf with tuples of logical axis names consumed by
+``repro.sharding``.  Apply functions are pure.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _init(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+
+def init_norm(d, dtype, kind="rmsnorm"):
+    p = {"scale": jnp.ones((d,), dtype=jnp.float32)}
+    l = {"scale": ("norm",)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype=jnp.float32)
+        l["bias"] = ("norm",)
+    return p, l
+
+
+def apply_norm(p, x, eps=1e-6, kind="rmsnorm"):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- dense
+
+def init_dense(key, d_in, d_out, dtype, axes=("embed", "mlp"), bias=False):
+    scale = 1.0 / math.sqrt(d_in)
+    p = {"w": _init(key, (d_in, d_out), scale, dtype)}
+    l = {"w": axes}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+        l["b"] = (axes[-1],)
+    return p, l
+
+
+def apply_dense(p, x):
+    y = jnp.einsum("...i,io->...o", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ------------------------------------------------------------ embedding
+
+def init_embedding(key, vocab, d, dtype):
+    # 1/sqrt(d) keeps tied-unembed logits O(1) at init; embed_scale configs
+    # multiply activations back up by sqrt(d).
+    p = {"table": _init(key, (vocab, d), 1.0 / math.sqrt(d), dtype)}
+    l = {"table": ("vocab", "embed")}
+    return p, l
+
+
+def apply_embedding(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def apply_unembed(p, x):
+    return jnp.einsum("...d,vd->...v", x, p["table"])
+
+
+# ----------------------------------------------------------------- rope
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    ang = ang[..., None, :]  # broadcast over heads: (..., S, 1, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta=10000.0):
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: (3, ..., S) — temporal / height / width position ids.  The
+    head_dim/2 frequency slots are partitioned into ``sections`` (t, h, w);
+    each section takes its angle from the corresponding position stream.
+    For pure text all three streams are equal and this reduces to RoPE.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    secs = jnp.cumsum(jnp.asarray((0,) + tuple(sections)))
+    slot = jnp.arange(d // 2)
+    which = jnp.clip(jnp.searchsorted(secs, slot, side="right") - 1, 0, 2)  # (d/2,)
+    # gather per-slot positions: (..., S, d/2)
+    pos = jnp.stack([positions3[i] for i in range(3)], axis=-1)  # (..., S, 3)
+    pos_slot = jnp.take_along_axis(
+        pos.astype(jnp.float32),
+        jnp.broadcast_to(which, pos.shape[:-1] + (d // 2,)),
+        axis=-1,
+    )
+    ang = (pos_slot * freqs)[..., None, :]  # (..., S, 1, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ mlp
+
+def init_mlp(key, d_model, d_ff, dtype, act="silu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "silu":  # swiglu
+        p, l = {}, {}
+        p["wi"], l["wi"] = _init(k1, (d_model, d_ff), 1 / math.sqrt(d_model), dtype), ("embed", "mlp")
+        p["wg"], l["wg"] = _init(k2, (d_model, d_ff), 1 / math.sqrt(d_model), dtype), ("embed", "mlp")
+        p["wo"], l["wo"] = _init(k3, (d_ff, d_model), 1 / math.sqrt(d_ff), dtype), ("mlp", "embed")
+        return p, l
+    p, l = {}, {}
+    p["wi"], l["wi"] = _init(k1, (d_model, d_ff), 1 / math.sqrt(d_model), dtype), ("embed", "mlp")
+    p["wo"], l["wo"] = _init(k3, (d_ff, d_model), 1 / math.sqrt(d_ff), dtype), ("mlp", "embed")
+    return p, l
+
+
+def apply_mlp(p, x, act="silu"):
+    if "wg" in p:
+        h = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["wi"])) * jnp.einsum(
+            "...d,df->...f", x, p["wg"])
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["wi"])
+        h = jax.nn.gelu(h) if act == "gelu" else jax.nn.silu(h)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])

@@ -1,0 +1,97 @@
+"""Mixture-of-Experts MLP with top-k routing and capacity-based dispatch.
+
+Dispatch is sort-based (argsort over flattened (token, choice) pairs) and
+scatter/gather-shaped so the expert dimension can shard over the ``model``
+mesh axis — the TPU-idiomatic analogue of the all-to-all dispatch in
+GShard/Switch.  Shared experts (Qwen2-MoE) run densely on every token.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.layers import _init, init_mlp, apply_mlp
+from repro.sharding.context import shard_act
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    dff = m.d_ff_expert or cfg.d_ff
+    k_router, k_exp, k_shared = jax.random.split(key, 3)
+    E = m.num_experts
+    s_in, s_out = 1 / math.sqrt(d), 1 / math.sqrt(dff)
+    ks = jax.random.split(k_exp, 3)
+    p = {
+        "router": _init(k_router, (d, E), s_in, jnp.float32),
+        "wi": _init(ks[0], (E, d, dff), s_in, dtype),
+        "wg": _init(ks[1], (E, d, dff), s_in, dtype),
+        "wo": _init(ks[2], (E, dff, d), s_out, dtype),
+    }
+    l = {
+        "router": ("embed", "expert"),
+        "wi": ("expert", "embed", "mlp"),
+        "wg": ("expert", "embed", "mlp"),
+        "wo": ("expert", "mlp", "embed"),
+    }
+    if m.num_shared_experts:
+        p["shared"], l["shared"] = init_mlp(
+            k_shared, d, dff * m.num_shared_experts, dtype, act=cfg.act)
+    return p, l
+
+
+def apply_moe(p, x, cfg: ModelConfig, capacity_factor=None):
+    """x: (..., d). Returns (y, aux_loss)."""
+    m = cfg.moe
+    E, K = m.num_experts, m.top_k
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)
+    T = xt.shape[0]
+    cf = capacity_factor if capacity_factor is not None else m.capacity_factor
+    C = max(K, int(math.ceil(T / E * cf * K)))
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, K)               # (T, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance auxiliary loss (Switch-style).
+    me = probs.mean(axis=0)                                   # (E,)
+    ce = jnp.zeros((E,)).at[gate_idx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # --- sort-based dispatch ------------------------------------------
+    N = T * K
+    flat_e = gate_idx.reshape(N)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")    # (E,)
+    pos_sorted = jnp.arange(N) - first[sorted_e]
+    pos = jnp.zeros((N,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    keep = pos < C
+
+    safe_pos = jnp.where(keep, pos, C - 1)
+    buf = jnp.zeros((E, C, d), x.dtype)
+    contrib = jnp.where(keep[:, None], xt[flat_t], 0).astype(x.dtype)
+    buf = buf.at[flat_e, safe_pos].add(contrib, mode="drop")
+    buf = shard_act(buf, ("expert", "capacity", "act_embed"))
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wi"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["wg"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"])          # (E, C, d)
+    out_buf = shard_act(out_buf, ("expert", "capacity", "act_embed"))
+
+    gathered = out_buf[flat_e, safe_pos]                      # (N, d)
+    w = jnp.where(keep, gate_w.reshape(N), 0.0).astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[flat_t].add(gathered * w[:, None])
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], xt, act=cfg.act)
+
+    return y.reshape(*lead, d), aux

@@ -1,0 +1,51 @@
+"""Chunked / checkpointed scan helpers (sqrt-T memory trick).
+
+TPU adaptation note: Mamba/xLSTM GPU kernels avoid materializing the
+recurrent state for every timestep by recomputing it in the backward pass
+inside a fused CUDA kernel.  The JAX/TPU-native equivalent is a chunked
+scan: an outer ``lax.scan`` over chunks carries only chunk-boundary states,
+and the inner per-chunk computation is wrapped in ``jax.checkpoint`` so its
+intermediates are rematerialized during the backward pass.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_scan(step_chunk, init_state, xs, seq_axis: int, chunk: int):
+    """Scan ``step_chunk(state, x_chunk) -> (state, y_chunk)`` over chunks.
+
+    ``xs`` is a pytree whose leaves share ``seq_axis`` of length T; T must be
+    divisible by ``chunk``.  Each chunk application is checkpointed.
+    """
+    T = jax.tree.leaves(xs)[0].shape[seq_axis]
+    assert T % chunk == 0, (T, chunk)
+    n = T // chunk
+
+    def to_chunks(a):
+        shape = a.shape
+        new = shape[:seq_axis] + (n, chunk) + shape[seq_axis + 1:]
+        return jnp.moveaxis(a.reshape(new), seq_axis, 0)
+
+    xs_c = jax.tree.map(to_chunks, xs)
+
+    body = jax.checkpoint(lambda s, x: step_chunk(s, x))
+
+    state, ys_c = jax.lax.scan(body, init_state, xs_c)
+
+    def from_chunks(a):
+        a = jnp.moveaxis(a, 0, seq_axis)  # (..., n, chunk, ...)
+        shape = a.shape
+        return a.reshape(shape[:seq_axis] + (T,) + shape[seq_axis + 2:])
+
+    return state, jax.tree.map(from_chunks, ys_c)
+
+
+def pick_chunk(T: int, target: int = 256) -> int:
+    """Largest divisor of T that is <= target (>=1)."""
+    c = min(target, T)
+    while T % c:
+        c -= 1
+    return c

@@ -1,0 +1,433 @@
+"""State-space / recurrent cells: Mamba (selective SSM), mLSTM and sLSTM.
+
+All cells expose three entry points:
+  init_<cell>(key, cfg, dtype)            -> (params, logical)
+  <cell>_full(p, x, cfg, state=None)      -> (y, final_state)   train/prefill
+  <cell>_step(p, x1, state, cfg)          -> (y1, state)        decode
+
+Full-sequence paths use a chunked scan (outer lax.scan over chunks carrying
+the recurrent state, inner computation checkpointed) — the TPU-native
+replacement for the fused recompute-in-backward CUDA kernels of the Mamba/
+xLSTM papers (see scan_utils).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.layers import _init
+from repro.models.scan_utils import chunked_scan, pick_chunk
+from repro.sharding.context import shard_act
+
+
+# =================================================================== mamba
+
+def _mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return di, s.d_state, s.d_conv, dt_rank
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di, ds, dc, dtr = _mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": _init(ks[0], (d, 2 * di), 1 / math.sqrt(d), dtype),
+        "conv_w": _init(ks[1], (dc, di), 1 / math.sqrt(dc), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _init(ks[2], (di, dtr + 2 * ds), 1 / math.sqrt(di), dtype),
+        "dt_w": _init(ks[3], (dtr, di), 1 / math.sqrt(dtr), dtype),
+        "dt_b": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _init(ks[5], (di, d), 1 / math.sqrt(di), dtype),
+    }
+    l = {
+        "in_proj": ("embed", "inner"),
+        "conv_w": ("conv", "inner"),
+        "conv_b": ("inner",),
+        "x_proj": ("inner", "state"),
+        "dt_w": ("state", "inner"),
+        "dt_b": ("inner",),
+        "A_log": ("inner", "state"),
+        "D": ("inner",),
+        "out_proj": ("inner", "embed"),
+    }
+    return p, l
+
+
+def init_mamba_state(batch, cfg: ModelConfig, dtype):
+    di, ds, dc, _ = _mamba_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, di, ds), jnp.float32),
+        "conv": jnp.zeros((batch, dc - 1, di), dtype),
+    }
+
+
+MAMBA_STATE_LOGICAL = {"h": ("batch", "inner", "state"),
+                       "conv": ("batch", "conv", "inner")}
+
+
+def _mamba_inner(p, xs_conv, dt, Bm, Cm, h0):
+    """Selective-scan over one chunk.
+
+    xs_conv: (B,T,di) post-conv activations; dt: (B,T,di); Bm/Cm: (B,T,ds);
+    h0: (B,di,ds).  Returns (y (B,T,di), hT).
+    """
+    A = -jnp.exp(p["A_log"])                                   # (di, ds)
+    dA = jnp.exp(dt[..., None] * A)                            # (B,T,di,ds)
+    dBx = (dt * xs_conv)[..., None] * Bm[:, :, None, :]        # (B,T,di,ds)
+
+    def combine(l, r):
+        a_l, b_l = l
+        a_r, b_r = r
+        return a_l * a_r, a_r * b_l + b_r
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h = a_cum * h0[:, None] + b_cum                            # (B,T,di,ds)
+    y = jnp.einsum("btds,bts->btd", h, Cm)
+    y = y + p["D"] * xs_conv
+    return y, h[:, -1]
+
+
+def _mamba_preproj(p, x, cfg):
+    di, ds, dc, dtr = _mamba_dims(cfg)
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    return shard_act(xs, ("batch", "seq", "inner")), shard_act(z, ("batch", "seq", "inner"))
+
+
+def _mamba_postconv(p, xc, cfg):
+    """xc: conv output (B,T,di). Returns dt, Bm, Cm (f32)."""
+    di, ds, dc, dtr = _mamba_dims(cfg)
+    dbc = jnp.einsum("btd,de->bte", xc, p["x_proj"]).astype(jnp.float32)
+    dt_in, Bm, Cm = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("btr,rd->btd", dt_in, p["dt_w"]) + p["dt_b"])
+    return dt, Bm, Cm
+
+
+def _causal_conv(p, xs, prev, dc):
+    """xs: (B,T,di); prev: (B,dc-1,di) left context. Returns (out, new_prev)."""
+    ext = jnp.concatenate([prev.astype(xs.dtype), xs], axis=1)  # (B, T+dc-1, di)
+    out = sum(ext[:, i:i + xs.shape[1]] * p["conv_w"][i] for i in range(dc))
+    out = jax.nn.silu(out + p["conv_b"])
+    new_prev = ext[:, -(dc - 1):] if dc > 1 else prev
+    return out, new_prev
+
+
+def mamba_full(p, x, cfg: ModelConfig, state=None, chunk=256):
+    B, T, _ = x.shape
+    di, ds, dc, _ = _mamba_dims(cfg)
+    if state is None:
+        state = init_mamba_state(B, cfg, x.dtype)
+    xs, z = _mamba_preproj(p, x, cfg)
+    ck = pick_chunk(T, chunk)
+
+    def step(st, xs_chunk):
+        xc, new_conv = _causal_conv(p, xs_chunk, st["conv"], dc)
+        dt, Bm, Cm = _mamba_postconv(p, xc, cfg)
+        y, hT = _mamba_inner(p, xc.astype(jnp.float32), dt, Bm, Cm, st["h"])
+        return {"h": hT, "conv": new_conv}, y
+
+    state, y = chunked_scan(step, state, xs, seq_axis=1, chunk=ck)
+    out = y.astype(x.dtype) * jax.nn.silu(z)
+    return jnp.einsum("btd,de->bte", out, p["out_proj"]), state
+
+
+def mamba_step(p, x1, state, cfg: ModelConfig):
+    """x1: (B,1,d)."""
+    di, ds, dc, _ = _mamba_dims(cfg)
+    xs, z = _mamba_preproj(p, x1, cfg)
+    xc, new_conv = _causal_conv(p, xs, state["conv"], dc)
+    dt, Bm, Cm = _mamba_postconv(p, xc, cfg)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * A)                       # (B,di,ds)
+    dBx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0, None, :]
+    h = dA * state["h"] + dBx
+    y = jnp.einsum("bds,bs->bd", h, Cm[:, 0]) + p["D"] * xc[:, 0].astype(jnp.float32)
+    out = y[:, None].astype(x1.dtype) * jax.nn.silu(z)
+    return jnp.einsum("btd,de->bte", out, p["out_proj"]), {"h": h, "conv": new_conv}
+
+
+# =================================================================== mLSTM
+
+def _mlstm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    H = s.num_heads
+    dh = di // H
+    return di, H, dh
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di, H, dh = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    s = 1 / math.sqrt(d)
+    si = 1 / math.sqrt(di)
+    p = {
+        "in_proj": _init(ks[0], (d, 2 * di), s, dtype),       # main + output gate
+        "wq": _init(ks[1], (di, H, dh), si, dtype),
+        "wk": _init(ks[2], (di, H, dh), si, dtype),
+        "wv": _init(ks[3], (di, H, dh), si, dtype),
+        "w_if": _init(ks[4], (di, 2 * H), si, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(jnp.float32),
+        "out_norm": jnp.ones((H, dh), jnp.float32),
+        "out_proj": _init(ks[6], (di, d), si, dtype),
+    }
+    l = {
+        "in_proj": ("embed", "inner"),
+        "wq": ("inner", "heads", "head_dim"),
+        "wk": ("inner", "heads", "head_dim"),
+        "wv": ("inner", "heads", "head_dim"),
+        "w_if": ("inner", "heads"),
+        "b_if": ("heads",),
+        "out_norm": ("heads", "head_dim"),
+        "out_proj": ("inner", "embed"),
+    }
+    return p, l
+
+
+def init_mlstm_state(batch, cfg: ModelConfig):
+    di, H, dh = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+MLSTM_STATE_LOGICAL = {"C": ("batch", "heads", "head_dim", "head_dim"),
+                       "n": ("batch", "heads", "head_dim"),
+                       "m": ("batch", "heads")}
+
+
+def _mlstm_gates_qkv(p, x, cfg):
+    u = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    main, og = jnp.split(u, 2, axis=-1)
+    q = jnp.einsum("bti,ihk->bthk", main, p["wq"])
+    k = jnp.einsum("bti,ihk->bthk", main, p["wk"])
+    v = jnp.einsum("bti,ihk->bthk", main, p["wv"])
+    gif = jnp.einsum("bti,ih->bth", main.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    i_pre, f_pre = jnp.split(gif, 2, axis=-1)                 # (B,T,H)
+    return q, k, v, i_pre, f_pre, og
+
+
+def _mlstm_cell_seq(q, k, v, i_pre, f_pre, st):
+    """Sequential (within-chunk) stabilized mLSTM recurrence.
+
+    q/k/v: (B,T,H,dh) f32; i_pre/f_pre: (B,T,H). Returns (h (B,T,H,dh), st).
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs
+        logf = jax.nn.log_sigmoid(ft)                         # (B,H)
+        m_new = jnp.maximum(logf + m, it)
+        f_act = jnp.exp(logf + m - m_new)[..., None, None]
+        i_act = jnp.exp(it - m_new)[..., None, None]
+        C = f_act * C + i_act * (kt[..., :, None] * vt[..., None, :])
+        n = f_act[..., 0] * n + i_act[..., 0] * kt
+        qs = qt * scale
+        num = jnp.einsum("bhkv,bhk->bhv", C, qs)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qs))
+        den = jnp.maximum(den, jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, i_pre, f_pre))
+    (C, n, m), h = jax.lax.scan(step, (st["C"], st["n"], st["m"]), xs)
+    return jnp.moveaxis(h, 0, 1), {"C": C, "n": n, "m": m}
+
+
+def _mlstm_cell_chunkwise(q, k, v, i_pre, f_pre, st, chunk=64):
+    """Chunkwise-parallel mLSTM (same closed form as the Pallas kernel):
+    the matrix memory C is updated once per chunk instead of per timestep,
+    turning the inner sums into (L,L)x(L,dh) MXU matmuls and cutting the
+    HBM round-trips of C by the chunk length.
+
+    q/k/v: (B,T,H,dh) f32; i/f: (B,T,H). Returns (h, state).
+    """
+    B, T, H, dh = q.shape
+    L = pick_chunk(T, chunk)
+    scale = 1.0 / math.sqrt(dh)
+    qs = q * scale
+
+    def step(carry, xs):
+        C, n, m = carry                                   # (B,H,dh,dh) ...
+        qc, kc, vc, ic, fc = xs                           # (B,L,H,*)
+        lf = jax.nn.log_sigmoid(fc)                       # (B,L,H)
+        F = jnp.cumsum(lf, axis=1)
+        g = jax.lax.cummax(ic - F, axis=1)
+        m_t = F + jnp.maximum(m[:, None], g)              # (B,L,H)
+
+        w_inter = jnp.exp(F + m[:, None] - m_t)           # (B,L,H)
+        qC = jnp.einsum("blhk,bhkv->blhv", qc, C)
+        num = w_inter[..., None] * qC
+        den = w_inter * jnp.einsum("blhk,bhk->blh", qc, n)
+
+        logw = (F - m_t)[:, :, None] + (ic - F)[:, None]  # (B,Lq,Ls,H)
+        t_idx = jnp.arange(L)
+        mask = t_idx[None, :, None, None] >= t_idx[None, None, :, None]
+        W = jnp.where(mask, jnp.exp(logw), 0.0)
+        S = jnp.einsum("blhk,bshk->blsh", qc, kc)
+        WS = W * S
+        num = num + jnp.einsum("blsh,bshv->blhv", WS, vc)
+        den = den + WS.sum(axis=2)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+        m_last = m_t[:, -1]                               # (B,H)
+        w_state = jnp.exp((F[:, -1:] - F) + ic - m_last[:, None])
+        decay = jnp.exp(F[:, -1] + m - m_last)
+        C2 = decay[..., None, None] * C + jnp.einsum(
+            "bshk,bshv->bhkv", kc * w_state[..., None], vc)
+        n2 = decay[..., None] * n + (kc * w_state[..., None]).sum(1)
+        return (C2, n2, m_last), h
+
+    def to_chunks(a):
+        return jnp.moveaxis(
+            a.reshape((B, T // L, L) + a.shape[2:]), 1, 0)
+
+    xs = tuple(to_chunks(a) for a in (qs, k, v, i_pre, f_pre))
+    (C, n, m), hs = jax.lax.scan(step, (st["C"], st["n"], st["m"]), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, H, dh)
+    return h, {"C": C, "n": n, "m": m}
+
+
+# module-level default so the perf hillclimb can switch the algorithm
+# without re-threading an argument through every block signature.
+# "chunkwise" adopted after the §Perf hillclimb: matches the sequential
+# oracle to ~1e-7 and cuts the mLSTM HBM-traffic term ~55x.
+MLSTM_DEFAULT_IMPL = "chunkwise"
+
+
+def mlstm_full(p, x, cfg: ModelConfig, state=None, chunk=128, impl=None):
+    impl = impl or MLSTM_DEFAULT_IMPL
+    B, T, _ = x.shape
+    if state is None:
+        state = init_mlstm_state(B, cfg)
+    q, k, v, i_pre, f_pre, og = _mlstm_gates_qkv(p, x, cfg)
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    if impl == "pallas":
+        from repro.kernels.mlstm_scan import ops as mls_ops
+        h, state = mls_ops.mlstm_chunkwise(qf, kf, vf, i_pre, f_pre, state)
+    elif impl == "chunkwise":
+        h, state = _mlstm_cell_chunkwise(qf, kf, vf, i_pre, f_pre, state,
+                                         chunk=min(chunk, 64))
+    else:
+        ck = pick_chunk(T, chunk)
+
+        def step(st, xs):
+            return tuple(
+                reversed(_mlstm_cell_seq(xs[0], xs[1], xs[2], xs[3], xs[4], st)))
+
+        state, h = chunked_scan(step, state, (qf, kf, vf, i_pre, f_pre),
+                                seq_axis=1, chunk=ck)
+    h = h * p["out_norm"]                                      # per-head scale
+    di, H, dh = _mlstm_dims(cfg)
+    h = h.reshape(B, T, di).astype(x.dtype) * jax.nn.silu(og)
+    return jnp.einsum("bti,id->btd", h, p["out_proj"]), state
+
+
+def mlstm_step(p, x1, state, cfg: ModelConfig):
+    q, k, v, i_pre, f_pre, og = _mlstm_gates_qkv(p, x1, cfg)
+    h, state = _mlstm_cell_seq(q.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), i_pre, f_pre, state)
+    h = h * p["out_norm"]
+    B = x1.shape[0]
+    di, H, dh = _mlstm_dims(cfg)
+    h = h.reshape(B, 1, di).astype(x1.dtype) * jax.nn.silu(og)
+    return jnp.einsum("bti,id->btd", h, p["out_proj"]), state
+
+
+# =================================================================== sLSTM
+
+def _slstm_dims(cfg: ModelConfig):
+    H = cfg.ssm.num_heads
+    dh = cfg.d_model // H
+    return H, dh
+
+
+def init_slstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H, dh = _slstm_dims(cfg)
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_x": _init(ks[0], (d, 4 * d), 1 / math.sqrt(d), dtype),   # z i f o
+        "r_h": _init(ks[1], (4, H, dh, dh), 1 / math.sqrt(dh), jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)),
+                              jnp.zeros((d,))]).astype(jnp.float32),
+        "out_proj": _init(ks[2], (d, d), 1 / math.sqrt(d), dtype),
+    }
+    l = {"w_x": ("embed", "inner"), "r_h": ("conv", "heads", "head_dim", "head_dim"),
+         "b": ("inner",), "out_proj": ("embed", "embed")}
+    return p, l
+
+
+def init_slstm_state(batch, cfg: ModelConfig):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": jnp.ones((batch, d), jnp.float32),
+            "m": jnp.zeros((batch, d), jnp.float32)}
+
+
+SLSTM_STATE_LOGICAL = {k: ("batch", "inner") for k in ("h", "c", "n", "m")}
+
+
+def _slstm_cell_seq(p, wx, st, cfg):
+    """wx: (B,T,4d) precomputed input projections."""
+    H, dh = _slstm_dims(cfg)
+    d = H * dh
+
+    def step(carry, xt):
+        h, c, n, m = carry
+        hh = h.reshape(-1, H, dh)
+        rec = jnp.einsum("ghkl,bhk->gbhl", p["r_h"], hh).reshape(4, -1, d)
+        pre = xt + p["b"] + jnp.concatenate([rec[0], rec[1], rec[2], rec[3]], -1)
+        z_pre, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+        z = jnp.tanh(z_pre)
+        o = jax.nn.sigmoid(o_pre)
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + m, i_pre)
+        i_act = jnp.exp(i_pre - m_new)
+        f_act = jnp.exp(logf + m - m_new)
+        c = f_act * c + i_act * z
+        n = f_act * n + i_act
+        h = o * (c / jnp.maximum(n, 1e-6))
+        return (h, c, n, m_new), h
+
+    xs = jnp.moveaxis(wx, 1, 0).astype(jnp.float32)
+    (h, c, n, m), hs = jax.lax.scan(step, (st["h"], st["c"], st["n"], st["m"]), xs)
+    return jnp.moveaxis(hs, 0, 1), {"h": h, "c": c, "n": n, "m": m}
+
+
+def slstm_full(p, x, cfg: ModelConfig, state=None, chunk=128):
+    B, T, _ = x.shape
+    if state is None:
+        state = init_slstm_state(B, cfg)
+    wx = jnp.einsum("btd,de->bte", x, p["w_x"])
+    ck = pick_chunk(T, chunk)
+
+    def step(st, wx_chunk):
+        hs, st2 = _slstm_cell_seq(p, wx_chunk, st, cfg)
+        return st2, hs
+
+    state, hs = chunked_scan(step, state, wx, seq_axis=1, chunk=ck)
+    return jnp.einsum("btd,de->bte", hs.astype(x.dtype), p["out_proj"]), state
+
+
+def slstm_step(p, x1, state, cfg: ModelConfig):
+    wx = jnp.einsum("btd,de->bte", x1, p["w_x"])
+    hs, state = _slstm_cell_seq(p, wx, state, cfg)
+    return jnp.einsum("btd,de->bte", hs.astype(x1.dtype), p["out_proj"]), state

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (adamw_init, adamw_update, OptState,
+                               exp_decay_schedule, cosine_schedule,
+                               warmup_cosine_schedule)
+
+__all__ = ["adamw_init", "adamw_update", "OptState", "exp_decay_schedule",
+           "cosine_schedule", "warmup_cosine_schedule"]

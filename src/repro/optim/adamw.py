@@ -1,0 +1,84 @@
+"""AdamW over arbitrary pytrees (pure JAX, no optax).
+
+Matches the paper's training recipe surface: Adam with weight decay 1e-5,
+lr 5e-5, exponential decay 0.9 — all expressible as schedules here.
+Moments are kept in f32 regardless of param dtype (mixed-precision safe).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(zeros, params),
+                    nu=jax.tree.map(zeros, params))
+
+
+def adamw_update(params, grads, state: OptState, *, lr, b1=0.9, b2=0.999,
+                 eps=1e-8, weight_decay=1e-5, grad_clip=1.0):
+    """Returns (new_params, new_state). ``lr`` may be a float or a
+    schedule fn(step)->float."""
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+
+    if grad_clip and grad_clip > 0:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g32
+        v2 = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m2 / (1 - b1 ** step)
+        vhat = v2 / (1 - b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, mu=new_m, nu=new_v)
+
+
+def exp_decay_schedule(base_lr: float, decay: float, steps_per_decay: int) -> Callable:
+    def fn(step):
+        return base_lr * decay ** (step / steps_per_decay)
+    return fn
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_frac=0.1) -> Callable:
+    def fn(step):
+        t = jnp.clip(step / total_steps, 0.0, 1.0)
+        return base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return fn
+
+
+def warmup_cosine_schedule(base_lr: float, warmup: int, total_steps: int,
+                           min_frac=0.0) -> Callable:
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), min_frac)
+    def fn(step):
+        w = jnp.clip(step / jnp.maximum(warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, base_lr * w, cos(step - warmup))
+    return fn

@@ -1,0 +1,4 @@
+from repro.serving.engine import TryageEngine, EngineStats
+from repro.serving.requests import Request, Result, parse_flags
+
+__all__ = ["TryageEngine", "EngineStats", "Request", "Result", "parse_flags"]

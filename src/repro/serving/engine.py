@@ -1,0 +1,126 @@
+"""The Tryage serving engine: batched router scoring -> constrained routing
+-> per-expert micro-batched execution.
+
+This is the production form of the paper's dispatch loop: requests queue
+up, the perceptive router scores a whole batch in one forward pass, the
+routing objective (with per-request lambda weights from user flags) picks
+an expert per prompt, prompts are grouped into per-expert micro-batches and
+executed, and results stream back with measured loss/accuracy plus a FLOPs
+proxy for the cost/performance telemetry that the Pareto analysis consumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from collections import defaultdict
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.library import ModelLibrary
+from repro.core.objective import Constraint
+from repro.core.router import RouterConfig, predict_losses
+from repro.models.model import forward
+from repro.serving.requests import Request, Result
+
+
+@dataclasses.dataclass
+class EngineStats:
+    served: int = 0
+    per_expert: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    total_flops: float = 0.0
+    router_time_s: float = 0.0
+    expert_time_s: float = 0.0
+
+    def summary(self) -> dict:
+        return {"served": self.served,
+                "per_expert": dict(self.per_expert),
+                "total_flops": self.total_flops,
+                "router_time_s": round(self.router_time_s, 3),
+                "expert_time_s": round(self.expert_time_s, 3)}
+
+
+class TryageEngine:
+    def __init__(self, library: ModelLibrary, router_params,
+                 rc: RouterConfig, constraints: Sequence[Constraint] = (),
+                 max_batch: int = 16, use_kernel: bool = False):
+        assert len(library) == rc.n_models
+        self.library = library
+        self.router_params = router_params
+        self.rc = rc
+        self.constraints = list(constraints)
+        self.max_batch = max_batch
+        self.use_kernel = use_kernel
+        self.queue: list[Request] = []
+        self.stats = EngineStats()
+
+        self._score = jax.jit(
+            lambda p, toks: predict_losses(p, rc, {"tokens": toks},
+                                           use_kernel=use_kernel))
+        self._expert_fns = {}
+        for e in library.experts:
+            self._expert_fns[e.name] = jax.jit(
+                functools.partial(self._expert_forward, cfg=e.cfg))
+
+    @staticmethod
+    def _expert_forward(params, toks, *, cfg):
+        logits, _, _ = forward(params, cfg, {"tokens": toks}, mode="train",
+                               remat=False)
+        return jnp.argmax(logits.astype(jnp.float32), axis=-1)
+
+    # ------------------------------------------------------------- api
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _route_batch(self, reqs: list[Request]) -> np.ndarray:
+        toks = np.stack([r.tokens for r in reqs])
+        t0 = time.time()
+        pred = np.asarray(self._score(self.router_params, jnp.asarray(toks)))
+        self.stats.router_time_s += time.time() - t0
+        # per-request lambdas: score = L-hat + sum_j lambda_j C_j
+        scores = pred.copy()
+        for c in self.constraints:
+            lam = np.array([r.lambdas.get(c.name, 0.0) for r in reqs])
+            scores = scores + lam[:, None] * c.values[None, :]
+        return pred, scores.argmin(axis=1)
+
+    def run(self) -> list[Result]:
+        """Drain the queue; returns one Result per request."""
+        results: list[Result] = []
+        while self.queue:
+            batch, self.queue = (self.queue[:self.max_batch],
+                                 self.queue[self.max_batch:])
+            pred, choice = self._route_batch(batch)
+            by_expert: dict[int, list[int]] = defaultdict(list)
+            for i, c in enumerate(choice):
+                by_expert[int(c)].append(i)
+            for mi, idxs in sorted(by_expert.items()):
+                e = self.library[mi]
+                toks = np.stack([batch[i].tokens for i in idxs])
+                t0 = time.time()
+                preds = np.asarray(
+                    self._expert_fns[e.name](e.params, jnp.asarray(toks)))
+                dt = time.time() - t0
+                self.stats.expert_time_s += dt
+                for j, i in enumerate(idxs):
+                    r = batch[i]
+                    loss = acc = None
+                    if r.targets is not None and r.mask is not None:
+                        m = r.mask.astype(bool)
+                        if m.any():
+                            acc = float((preds[j][m] == r.targets[m]).mean())
+                    flops = 2.0 * e.n_params * len(r.tokens)
+                    results.append(Result(
+                        uid=r.uid, expert=e.name, pred_losses=pred[i],
+                        predictions=preds[j], loss=loss, accuracy=acc,
+                        flops_proxy=flops, latency_s=dt / max(len(idxs), 1)))
+                    self.stats.served += 1
+                    self.stats.per_expert[e.name] += 1
+                    self.stats.total_flops += flops
+        return results

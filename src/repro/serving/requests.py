@@ -1,0 +1,59 @@
+"""Request/Result types and the user-flag mini-language.
+
+The paper folds user constraints into the prompt itself, e.g.
+"The capital of California is [blank] [Flag: Smallest model]".  We parse
+the same flag surface into constraint weights (lambdas).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+_FLAG_RE = re.compile(r"\[flag:\s*([^\]]+)\]", re.IGNORECASE)
+
+# flag phrase -> (constraint name, lambda)
+FLAG_TABLE = {
+    "smallest model": ("size", 8.0),
+    "small model": ("size", 2.0),
+    "prefer small": ("size", 1.0),
+    "newest model": ("recency", 4.0),
+    "recent model": ("recency", 1.0),
+    "best model": (None, 0.0),
+}
+
+
+def parse_flags(text: str) -> dict:
+    """Extract constraint weights from [Flag: ...] markers."""
+    lambdas: dict[str, float] = {}
+    for m in _FLAG_RE.finditer(text):
+        phrase = m.group(1).strip().lower()
+        entry = FLAG_TABLE.get(phrase)
+        if entry and entry[0]:
+            lambdas[entry[0]] = max(lambdas.get(entry[0], 0.0), entry[1])
+    return lambdas
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray                 # (S,) masked MLM prompt
+    targets: Optional[np.ndarray] = None
+    mask: Optional[np.ndarray] = None
+    lambdas: dict = dataclasses.field(default_factory=dict)
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    expert: str
+    pred_losses: np.ndarray            # router's L-hat over the library
+    predictions: np.ndarray            # argmax token at each position
+    loss: float | None                 # measured, if targets supplied
+    accuracy: float | None
+    flops_proxy: float                 # 2 * params * tokens
+    latency_s: float

@@ -1,0 +1,20 @@
+from repro.sharding.context import activation_sharding, shard_act
+from repro.sharding.rules import (
+    LogicalRules,
+    DEFAULT_RULES,
+    MULTIPOD_RULES,
+    logical_to_spec,
+    tree_logical_to_sharding,
+    tree_logical_to_spec,
+)
+
+__all__ = [
+    "activation_sharding",
+    "shard_act",
+    "LogicalRules",
+    "DEFAULT_RULES",
+    "MULTIPOD_RULES",
+    "logical_to_spec",
+    "tree_logical_to_sharding",
+    "tree_logical_to_spec",
+]

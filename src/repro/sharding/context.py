@@ -1,0 +1,43 @@
+"""Activation-sharding constraints via an ambient context.
+
+XLA's sharding propagation can silently drop the batch sharding deep in a
+network (observed: attention scores materializing the full global batch per
+device).  Production frameworks pin activation shardings explicitly; we do
+the same with ``shard_act(x, logical_axes)``, which no-ops outside an
+``activation_sharding(mesh, rules)`` context so model code stays runnable
+on a single device.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.sharding.rules import LogicalRules, logical_to_spec
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules: LogicalRules):
+    tok = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def shard_act(x, logical_axes: tuple):
+    """Constrain activation ``x`` to the ambient mesh/rules (no-op if none)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(logical_axes) != x.ndim:
+        return x
+    spec = logical_to_spec(mesh, logical_axes, x.shape, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,147 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Every parameter/activation in the framework is annotated with a tuple of
+*logical* axis names (e.g. ``("embed", "mlp")``).  A ``LogicalRules`` maps
+logical names to mesh axis names (or tuples of mesh axes).  The mapping is
+divisibility-aware: a rule only applies when the concrete dimension size is
+divisible by the mesh-axis product, otherwise the dim is replicated.  This
+is what lets one rule-set serve architectures with 4..64 heads, vocab 504
+.. 262144, expert counts 8/16/60 on a fixed 16x16 (x2 pods) mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalRules:
+    """Mapping from logical axis name -> mesh axis (str | tuple | None)."""
+
+    rules: Mapping[str, object]
+
+    def mesh_axes_for(self, logical: str):
+        return self.rules.get(logical, None)
+
+
+# Logical vocabulary used across the framework:
+#   batch    - global batch dim                  -> data (+ pod)
+#   seq      - sequence dim of activations       -> unsharded (default)
+#   cache    - KV-cache sequence dim             -> sharded at decode
+#   embed    - d_model rows of weight matrices   -> fsdp axis ("data")
+#   mlp      - d_ff / hidden of MLPs             -> model
+#   heads    - query heads                       -> model
+#   kv_heads - kv heads (GQA, often small)       -> model (if divisible)
+#   head_dim - per-head dim                      -> unsharded
+#   vocab    - vocabulary                        -> model
+#   expert   - MoE expert dim                    -> model (fallback data)
+#   state    - SSM/recurrent state dim           -> model
+#   conv     - conv kernel taps                  -> unsharded
+#   norm     - norm scales                       -> unsharded
+
+DEFAULT_RULES = LogicalRules(
+    rules={
+        "batch": "data",
+        "seq": None,
+        "cache": "model",
+        "embed": "data",  # FSDP: shard d_model rows of weights over data
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "vocab": "model",
+        "expert": "model",
+        "capacity": "data",  # MoE dispatch-buffer capacity dim
+        "state": None,
+        "inner": "model",  # SSM expanded inner dim
+        "conv": None,
+        "norm": None,
+        "act_embed": None,  # activations keep d_model replicated
+    }
+)
+
+MULTIPOD_RULES = LogicalRules(
+    rules={
+        **DEFAULT_RULES.rules,
+        "batch": ("pod", "data"),
+        "embed": ("pod", "data"),
+    }
+)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def logical_to_spec(
+    mesh: Mesh,
+    logical_axes: Sequence[str | None],
+    dim_sizes: Sequence[int] | None,
+    rules: LogicalRules,
+) -> P:
+    """Build a PartitionSpec for one array.
+
+    A mesh axis is assigned to a dim only if the dim size divides evenly;
+    each mesh axis may be used at most once per array (SPMD requirement).
+    """
+    used: set[str] = set()
+    out = []
+    for i, name in enumerate(logical_axes):
+        axes = rules.mesh_axes_for(name) if name is not None else None
+        if axes is None:
+            out.append(None)
+            continue
+        axes_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        # drop axes already claimed by an earlier dim of this array and
+        # keep the usable remainder (e.g. ("model","data") with "model"
+        # taken by the expert dim still shards over "data")
+        axes_tuple = tuple(a for a in axes_tuple if a not in used)
+        if not axes_tuple:
+            out.append(None)
+            continue
+        size = _axis_size(mesh, axes_tuple)
+        if dim_sizes is not None and dim_sizes[i] % size != 0:
+            # Try progressively shorter prefixes of the axis tuple.
+            placed = False
+            for k in range(len(axes_tuple) - 1, 0, -1):
+                sub = axes_tuple[:k]
+                ssize = _axis_size(mesh, sub)
+                if dim_sizes[i] % ssize == 0:
+                    out.append(sub if len(sub) > 1 else sub[0])
+                    used.update(sub)
+                    placed = True
+                    break
+            if not placed:
+                out.append(None)
+            continue
+        used.update(axes_tuple)
+        out.append(axes_tuple[0] if len(axes_tuple) == 1 else axes_tuple)
+    return P(*out)
+
+
+def tree_logical_to_spec(mesh: Mesh, logical_tree, shape_tree, rules: LogicalRules):
+    """Map a pytree of logical-axes tuples (+ matching shapes) to PartitionSpecs."""
+
+    def one(logical, shaped):
+        shape = shaped.shape if hasattr(shaped, "shape") else tuple(shaped)
+        assert len(logical) == len(shape), (logical, shape)
+        return logical_to_spec(mesh, logical, shape, rules)
+
+    return jax.tree.map(
+        one, logical_tree, shape_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def tree_logical_to_sharding(mesh: Mesh, logical_tree, shape_tree, rules: LogicalRules):
+    specs = tree_logical_to_spec(mesh, logical_tree, shape_tree, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

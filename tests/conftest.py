@@ -1,0 +1,22 @@
+"""Shared fixtures. NOTE: tests must see the single real CPU device —
+the 512-device XLA flag belongs ONLY to launch/dryrun.py subprocesses."""
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def corpus():
+    from repro.data.corpus import DomainCorpus
+    return DomainCorpus(vocab_size=512, seed=0)

@@ -1,0 +1,132 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models.common import AttnConfig, ModelConfig
+
+
+def _cfg(heads=4, kv=2, causal=True, window=0, qkv_bias=False, theta=10000.0):
+    return ModelConfig(
+        name="t", family="dense", num_layers=1, d_model=64, num_heads=heads,
+        num_kv_heads=kv, d_ff=128, vocab_size=64,
+        attn=AttnConfig(rope_theta=theta, causal=causal,
+                        sliding_window=window,
+                        window_pattern="all_local" if window else "all_global",
+                        qkv_bias=qkv_bias),
+        dtype="float32")
+
+
+def test_causal_masking(key):
+    """Future tokens must not influence earlier outputs."""
+    cfg = _cfg()
+    p, _ = A.init_attention(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (1, 8, 64))
+    pos = jnp.arange(8)[None]
+    y1, _ = A.attend_full(p, x, cfg, pos)
+    x2 = x.at[:, -1].set(99.0)
+    y2, _ = A.attend_full(p, x2, cfg, pos)
+    np.testing.assert_allclose(np.asarray(y1[:, :-1]), np.asarray(y2[:, :-1]),
+                               atol=1e-5)
+    assert not np.allclose(np.asarray(y1[:, -1]), np.asarray(y2[:, -1]))
+
+
+def test_bidirectional_sees_future(key):
+    cfg = _cfg(causal=False)
+    p, _ = A.init_attention(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (1, 8, 64))
+    pos = jnp.arange(8)[None]
+    y1, _ = A.attend_full(p, x, cfg, pos)
+    y2, _ = A.attend_full(p, x.at[:, -1].set(9.0), cfg, pos)
+    assert not np.allclose(np.asarray(y1[:, 0]), np.asarray(y2[:, 0]))
+
+
+def test_sliding_window_equals_full_for_short_seq(key):
+    cfg_w = _cfg(window=16)
+    p, _ = A.init_attention(key, cfg_w, jnp.float32)
+    x = jax.random.normal(key, (2, 8, 64))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    y_w, _ = A.attend_full(p, x, cfg_w, pos, window=16)
+    y_f, _ = A.attend_full(p, x, cfg_w, pos, window=0)
+    np.testing.assert_allclose(np.asarray(y_w), np.asarray(y_f), atol=1e-5)
+
+
+def test_sliding_window_limits_context(key):
+    cfg = _cfg(window=4)
+    p, _ = A.init_attention(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (1, 16, 64))
+    pos = jnp.arange(16)[None]
+    y1, _ = A.attend_full(p, x, cfg, pos, window=4)
+    y2, _ = A.attend_full(p, x.at[:, 0].set(50.0), cfg, pos, window=4)
+    # token 10 is outside window of token 0 -> unaffected
+    np.testing.assert_allclose(np.asarray(y1[:, 10:]), np.asarray(y2[:, 10:]),
+                               atol=1e-4)
+
+
+def test_chunked_matches_unchunked(key):
+    cfg = _cfg()
+    p, _ = A.init_attention(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 64, 64))
+    pos = jnp.broadcast_to(jnp.arange(64)[None], (2, 64))
+    q, k, v = A._project_qkv(p, x, cfg, pos)
+    kr, vr = A._repeat_kv(k, v, cfg.num_heads)
+
+    def bias_fn(off, qn):
+        qi = jnp.arange(qn)[:, None] + off
+        kj = jnp.arange(64)[None, :]
+        return jnp.where(kj <= qi, 0.0, A.NEG_INF)
+
+    o_small = A._sdpa_chunked(q, kr, vr, bias_fn, q_chunk=16)
+    o_full = A._sdpa_chunked(q, kr, vr, bias_fn, q_chunk=64)
+    np.testing.assert_allclose(np.asarray(o_small), np.asarray(o_full),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [0, 8])
+def test_decode_matches_prefill(key, window):
+    """Prefill then one decode step == full forward over S+1 tokens."""
+    cfg = _cfg(window=window)
+    p, _ = A.init_attention(key, cfg, jnp.float32)
+    S = 24
+    x = jax.random.normal(key, (1, S + 1, 64))
+    pos = jnp.arange(S + 1)[None]
+    y_full, _ = A.attend_full(p, x, cfg, pos, window=window)
+
+    y_pre, kv = A.attend_full(p, x[:, :S], cfg, pos[:, :S], window=window)
+    cache = A.prefill_cache_from_kv(kv[0], kv[1], window, jnp.float32,
+                                    capacity=S + 1)
+    y_dec, _ = A.attend_decode(p, x[:, S:], cache, S, cfg, pos[:, S:],
+                               window=window)
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]),
+                               np.asarray(y_full[:, S]), atol=1e-4)
+
+
+def test_ring_buffer_wraps(key):
+    """Decoding past the window keeps exactly the last W tokens."""
+    cfg = _cfg(window=8)
+    p, _ = A.init_attention(key, cfg, jnp.float32)
+    W, S = 8, 20
+    x = jax.random.normal(key, (1, S + 1, 64))
+    pos = jnp.arange(S + 1)[None]
+    y_full, _ = A.attend_full(p, x, cfg, pos, window=W)
+
+    cache = A.init_kv_cache(1, W, cfg, jnp.float32)
+    y_dec = None
+    for t in range(S + 1):
+        y_dec, cache = A.attend_decode(p, x[:, t:t + 1], cache, t, cfg,
+                                       pos[:, t:t + 1], window=W)
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]),
+                               np.asarray(y_full[:, S]), atol=1e-4)
+
+
+def test_layer_window_patterns():
+    cfg = _cfg(window=128)
+    cfg = dataclasses.replace(
+        cfg, attn=dataclasses.replace(cfg.attn, window_pattern="gemma",
+                                      global_every=6))
+    ws = [A.layer_window(cfg, i) for i in range(12)]
+    assert ws[5] == 0 and ws[11] == 0
+    assert all(w == 128 for i, w in enumerate(ws) if i % 6 != 5)

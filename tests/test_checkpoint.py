@@ -1,0 +1,35 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+def test_roundtrip(tmp_path, key):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                   "c": (jnp.zeros((2,)), jnp.array(3))},
+    }
+    path = str(tmp_path / "ckpt")
+    save_pytree(path, tree)
+    back = load_pytree(path)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # bf16 dtype preserved through npz (as uint16 view? must match)
+    assert back["nested"]["b"].dtype == np.asarray(tree["nested"]["b"]).dtype
+
+
+def test_manager_best_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    for step, metric in [(1, 0.5), (2, 0.3), (3, 0.4), (4, 0.35)]:
+        mgr.save(step, {"w": jnp.array(float(step))}, metric=metric)
+    best = mgr.load_best()
+    assert float(best["w"]) == 2.0  # step 2 had lowest metric
+    # only last two step checkpoints retained
+    files = {f for f in os.listdir(tmp_path) if f.startswith("step_")}
+    assert len(files) == 4  # 2 steps x (npz + json)
+    assert mgr.load_step(4) is not None

@@ -1,0 +1,70 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.batching import BatchIterator, clm_batch, mlm_batch
+from repro.data.corpus import DOMAINS, DomainCorpus, MASK, N_SPECIAL
+
+
+def test_deterministic(corpus):
+    r1 = np.random.default_rng(7)
+    r2 = np.random.default_rng(7)
+    a = corpus.sample_tokens("github", 4, 64, r1)
+    b = corpus.sample_tokens("github", 4, 64, r2)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_domains_have_distinct_statistics(corpus):
+    """Private-vocabulary fingerprints must differ across domains (the
+    Fig.-2 premise needs genuinely different distributions)."""
+    rng = np.random.default_rng(0)
+    hist = {}
+    for d in DOMAINS:
+        toks = corpus.sample_tokens(d, 16, 256, rng)
+        h = np.bincount(toks.ravel(), minlength=corpus.vocab_size)
+        hist[d] = h / h.sum()
+    doms = list(DOMAINS)
+    for i in range(len(doms)):
+        for j in range(i + 1, len(doms)):
+            tv = 0.5 * np.abs(hist[doms[i]] - hist[doms[j]]).sum()
+            assert tv > 0.3, (doms[i], doms[j], tv)
+
+
+def test_private_vocab_dominates_home_domain(corpus):
+    rng = np.random.default_rng(1)
+    toks = corpus.sample_tokens("uspto", 8, 256, rng)
+    frac = np.isin(toks, corpus.private_vocab["uspto"]).mean()
+    assert frac > 0.4
+
+
+@given(mask_rate=st.floats(min_value=0.05, max_value=0.5), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_mlm_batch_properties(mask_rate, seed):
+    corpus = DomainCorpus(vocab_size=256, seed=1)
+    rng = np.random.default_rng(seed)
+    toks = corpus.sample_tokens("books", 4, 128, rng)
+    b = mlm_batch(toks, rng, mask_rate, 256)
+    # unmasked positions pass through unchanged
+    keep = b["mask"] == 0
+    np.testing.assert_array_equal(b["tokens"][keep], b["targets"][keep])
+    # targets are always the original tokens
+    np.testing.assert_array_equal(b["targets"], toks)
+    # realized mask rate in the right ballpark
+    assert abs(b["mask"].mean() - mask_rate) < 0.15
+    # no masking of position 0
+    assert (b["mask"][:, 0] == 0).all()
+
+
+def test_mixture_labels(corpus):
+    rng = np.random.default_rng(3)
+    toks, labels = corpus.sample_mixture({"github": 1.0}, 8, 64, rng)
+    assert (labels == DOMAINS.index("github")).all()
+    frac = np.isin(toks, corpus.private_vocab["github"]).mean()
+    assert frac > 0.4
+
+
+def test_batch_iterator(corpus):
+    it = BatchIterator(corpus, {d: 1 / 8 for d in DOMAINS}, 8, 64, seed=0)
+    b = next(it)
+    assert b["tokens"].shape == (8, 64)
+    assert set(b) == {"tokens", "targets", "mask", "domain"}

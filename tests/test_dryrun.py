@@ -1,0 +1,88 @@
+"""Dry-run machinery tests.
+
+The full 40-pair x 2-mesh matrix runs via ``python -m repro.launch.dryrun``
+(results under experiments/dryrun).  Here we (a) verify the HLO collective
+parser on known text, (b) verify roofline math, and (c) spot-check one
+real lower+compile on the production mesh in a subprocess (which is the
+only place the 512-device XLA flag may be set).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch import hlo_stats
+from repro.launch.roofline import Roofline
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_collective_parser():
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(bf16[1,1024]{1,0} %x), replica_groups={}
+  %ar.1 = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%add
+  %rs = f32[8,32]{1,0} reduce-scatter(f32[64,32]{1,0} %z), dimensions={0}
+  %cp = u32[4]{0} collective-permute(u32[4]{0} %w), source_target_pairs={{0,1}}
+  %a2a = bf16[2,8]{1,0} all-to-all(bf16[2,8]{1,0} %v), dimensions={0}
+  %ar-start = f32[128]{0} all-reduce-start(f32[128]{0} %q), to_apply=%add
+  %ar-done = f32[128]{0} all-reduce-done(f32[128]{0} %ar-start)
+"""
+    stats = hlo_stats.collective_stats(hlo)
+    assert stats["all-gather"]["count"] == 1
+    assert stats["all-gather"]["bytes"] == 16 * 1024 * 2
+    assert stats["all-reduce"]["count"] == 2           # ar.1 + ar-start
+    assert stats["reduce-scatter"]["bytes"] == 8 * 32 * 4
+    assert stats["collective-permute"]["count"] == 1
+    assert stats["all-to-all"]["bytes"] == 2 * 8 * 2
+    assert stats["total_count"] == 6
+
+
+def test_roofline_terms():
+    rl = Roofline(flops=197e12, hbm_bytes=819e9, collective_bytes=50e9)
+    assert abs(rl.t_compute - 1.0) < 1e-9
+    assert abs(rl.t_memory - 1.0) < 1e-9
+    assert abs(rl.t_collective - 1.0) < 1e-9
+    rl2 = Roofline(flops=1e12, hbm_bytes=819e9, collective_bytes=0)
+    assert rl2.dominant == "memory"
+
+
+def test_applicability_matrix():
+    from repro.configs import get_config
+    from repro.launch.specs import applicable
+    from repro.models.common import INPUT_SHAPES
+    ok, _ = applicable(get_config("hubert-xlarge"), INPUT_SHAPES["decode_32k"])
+    assert not ok
+    ok, _ = applicable(get_config("tinyllama-1.1b"), INPUT_SHAPES["long_500k"])
+    assert not ok
+    ok, _ = applicable(get_config("xlstm-1.3b"), INPUT_SHAPES["long_500k"])
+    assert ok
+    ok, _ = applicable(get_config("gemma3-4b"), INPUT_SHAPES["long_500k"])
+    assert ok  # sliding-window qualifies
+    ok, _ = applicable(get_config("grok-1-314b"), INPUT_SHAPES["train_4k"])
+    assert ok
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_compiles_one_pair():
+    """One real (arch x shape) lower+compile on the 16x16 production mesh."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "qwen1.5-0.5b", "--shape", "decode_32k", "--mesh", "pod",
+         "--tag", "pytest"],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "[OK  ]" in out.stdout
+    path = os.path.join(REPO, "experiments", "dryrun",
+                        "qwen1.5-0.5b_decode_32k_pod_pytest.json")
+    with open(path) as f:
+        rec = json.load(f)
+    assert rec["status"] == "OK"
+    assert rec["n_chips"] == 256
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert rec["memory"]["peak_bytes_per_device"] > 0

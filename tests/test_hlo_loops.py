@@ -1,0 +1,62 @@
+"""Loop-aware HLO accounting: scanned and unrolled forms of the same
+computation must report identical dot FLOPs (the roofline's key input)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_loops import loop_aware_totals
+
+
+@pytest.fixture(scope="module")
+def wx():
+    W = jax.random.normal(jax.random.PRNGKey(0), (8, 64, 64))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    return W, x
+
+
+def test_scan_equals_unroll_flops(wx):
+    W, x = wx
+
+    def scanned(x):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        return jax.lax.scan(body, x, W)[0].sum()
+
+    def unrolled(x):
+        h = x
+        for i in range(8):
+            h = jnp.tanh(h @ W[i])
+        return h.sum()
+
+    f_scan = loop_aware_totals(
+        jax.jit(scanned).lower(x).compile().as_text())["dot_flops"]
+    f_unroll = loop_aware_totals(
+        jax.jit(unrolled).lower(x).compile().as_text())["dot_flops"]
+    expected = 8 * 2 * 4 * 64 * 64
+    assert f_scan == expected
+    assert f_unroll == expected
+
+
+def test_nested_scan_multiplies(wx):
+    W, x = wx
+
+    def nested(x):
+        def outer(h, _):
+            def inner(h2, w):
+                return jnp.tanh(h2 @ w), None
+            h, _ = jax.lax.scan(inner, h, W)
+            return h, None
+        return jax.lax.scan(outer, x, None, length=3)[0].sum()
+
+    f = loop_aware_totals(
+        jax.jit(nested).lower(x).compile().as_text())["dot_flops"]
+    assert f == 3 * 8 * 2 * 4 * 64 * 64
+
+
+def test_traffic_and_collectives_nonnegative(wx):
+    W, x = wx
+    tot = loop_aware_totals(
+        jax.jit(lambda x: (x @ W[0]).sum()).lower(x).compile().as_text())
+    assert tot["traffic_bytes"] > 0
+    assert tot["collective_bytes"] == 0

@@ -1,0 +1,146 @@
+"""Per-kernel correctness: sweep shapes/dtypes, assert_allclose vs ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mlstm_scan.ops import mlstm_chunkwise
+from repro.kernels.mlstm_scan.ref import mlstm_ref
+from repro.kernels.router_score.kernel import router_score_fused
+from repro.kernels.router_score.ref import router_score_ref
+
+
+# ------------------------------------------------------- flash attention
+
+FLASH_CASES = [
+    # B, S, H, KV, hd, causal, window, softcap, dtype
+    (2, 128, 4, 4, 64, True, 0, 0.0, jnp.float32),
+    (1, 256, 4, 2, 64, True, 0, 0.0, jnp.float32),
+    (2, 128, 2, 1, 128, True, 32, 0.0, jnp.float32),
+    (1, 128, 2, 2, 64, False, 0, 0.0, jnp.float32),
+    (1, 128, 2, 2, 64, True, 0, 30.0, jnp.float32),
+    (1, 128, 4, 2, 64, True, 0, 0.0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,causal,window,cap,dtype", FLASH_CASES)
+def test_flash_attention_vs_ref(B, S, H, KV, hd, causal, window, cap, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                          block_q=64, block_k=64)
+    kr, vr = jnp.repeat(k, H // KV, 2), jnp.repeat(v, H // KV, 2)
+    tb = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    ref = attention_ref(tb(q), tb(kr), tb(vr), causal=causal, window=window,
+                        softcap=cap)
+    ref = ref.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_flash_attention_block_size_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    o1 = flash_attention(q, k, v, block_q=32, block_k=64)
+    o2 = flash_attention(q, k, v, block_q=128, block_k=128)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+# ------------------------------------------------------- router score
+
+@pytest.mark.parametrize("B,d,hid,M,nc,block_b", [
+    (16, 64, 32, 11, 2, 16),
+    (37, 128, 64, 11, 2, 16),   # non-divisible batch -> padding path
+    (64, 128, 128, 5, 1, 64),
+    (8, 32, 16, 3, 3, 8),
+])
+def test_router_score_vs_ref(B, d, hid, M, nc, block_b):
+    ks = jax.random.split(jax.random.PRNGKey(2), 7)
+    emb = jax.random.normal(ks[0], (B, d))
+    w1 = jax.random.normal(ks[1], (d, hid)) * 0.1
+    b1 = jax.random.normal(ks[2], (hid,)) * 0.1
+    w2 = jax.random.normal(ks[3], (hid, M)) * 0.1
+    b2 = jax.random.normal(ks[4], (M,)) * 0.1
+    cv = jax.random.uniform(ks[5], (nc, M))
+    lam = jax.random.uniform(ks[6], (B, nc)) * 2
+    p1, c1 = router_score_fused(emb, w1, b1, w2, b2, cv, lam,
+                                block_b=block_b)
+    p2, c2 = router_score_ref(emb, w1, b1, w2, b2, cv, lam)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-5)
+    assert bool((c1 == c2).all())
+
+
+# ------------------------------------------------------- mlstm chunkwise
+
+@pytest.mark.parametrize("B,S,H,dh,chunk", [
+    (1, 64, 1, 16, 16),
+    (2, 128, 2, 32, 32),
+    (1, 128, 2, 64, 64),
+    (2, 96, 1, 32, 32),  # 3 chunks
+])
+def test_mlstm_chunkwise_vs_ref(B, S, H, dh, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 3.0
+    st = {"C": jnp.zeros((B, H, dh, dh)), "n": jnp.zeros((B, H, dh)),
+          "m": jnp.zeros((B, H))}
+    h, st1 = mlstm_chunkwise(q, k, v, ig, fg, st, chunk=chunk)
+    tb = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    tb2 = lambda a: a.transpose(0, 2, 1).reshape(B * H, S)
+    hr, Cr, nr, mr = mlstm_ref(
+        tb(q), tb(k), tb(v), tb2(ig), tb2(fg),
+        st["C"].reshape(B * H, dh, dh), st["n"].reshape(B * H, dh),
+        st["m"].reshape(B * H))
+    hr = hr.reshape(B, H, S, dh).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st1["C"].reshape(B * H, dh, dh)),
+                               np.asarray(Cr), atol=5e-4, rtol=1e-3)
+
+
+def test_mlstm_chunkwise_carries_state():
+    """Running two halves with carried state == one full run."""
+    B, S, H, dh = 1, 64, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 3.0
+    z = {"C": jnp.zeros((B, H, dh, dh)), "n": jnp.zeros((B, H, dh)),
+         "m": jnp.zeros((B, H))}
+    h_full, _ = mlstm_chunkwise(q, k, v, ig, fg, z, chunk=16)
+    h1, st = mlstm_chunkwise(q[:, :32], k[:, :32], v[:, :32],
+                             ig[:, :32], fg[:, :32], z, chunk=16)
+    h2, _ = mlstm_chunkwise(q[:, 32:], k[:, 32:], v[:, 32:],
+                            ig[:, 32:], fg[:, 32:], st, chunk=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(h_full), atol=5e-4, rtol=1e-3)
+
+
+def test_mlstm_kernel_is_model_impl():
+    """The pallas path of mlstm_full matches the xla path."""
+    from repro.models import ssm
+    from repro.models.common import ModelConfig, SSMConfig
+    cfg = ModelConfig(name="t", family="ssm", num_layers=1, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=0, vocab_size=64,
+                      ssm=SSMConfig(kind="mlstm", num_heads=2, expand=2),
+                      layer_pattern=("mlstm",), moe_pattern=(False,),
+                      dtype="float32")
+    p, _ = ssm.init_mlstm(jax.random.PRNGKey(5), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 64, 32)) * 0.5
+    y_xla, _ = ssm.mlstm_full(p, x, cfg, impl="xla")
+    y_pl, _ = ssm.mlstm_full(p, x, cfg, impl="pallas")
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_pl),
+                               atol=5e-4, rtol=1e-3)

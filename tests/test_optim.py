@@ -1,0 +1,47 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (adamw_init, adamw_update, cosine_schedule,
+                         exp_decay_schedule, warmup_cosine_schedule)
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([5.0, -3.0]), "b": jnp.array(2.0)}
+    opt = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, opt = adamw_update(params, g, opt, lr=5e-2, weight_decay=0.0)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_grad_clip():
+    params = {"w": jnp.array([1.0])}
+    opt = adamw_init(params)
+    g = {"w": jnp.array([1e9])}
+    p2, _ = adamw_update(params, g, opt, lr=1e-2, grad_clip=1.0)
+    assert abs(float(p2["w"][0] - params["w"][0])) < 0.1
+
+
+def test_adamw_moments_f32_for_bf16_params():
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    opt = adamw_init(params)
+    assert opt.mu["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16) * 0.1}
+    p2, o2 = adamw_update(params, g, opt, lr=1e-2)
+    assert p2["w"].dtype == jnp.bfloat16
+
+
+def test_schedules():
+    s = exp_decay_schedule(1.0, 0.9, 10)
+    assert abs(float(s(10)) - 0.9) < 1e-6
+    c = cosine_schedule(1.0, 100, min_frac=0.1)
+    assert float(c(0)) == 1.0
+    assert abs(float(c(100)) - 0.1) < 1e-6
+    w = warmup_cosine_schedule(1.0, 10, 110)
+    assert float(w(0)) == 0.0
+    assert abs(float(w(10)) - 1.0) < 1e-6

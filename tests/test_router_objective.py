@@ -1,0 +1,114 @@
+"""Routing-objective invariants — including hypothesis property tests on
+the system's core math (eq. 1/4)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.library import ExpertSpec, ModelLibrary, _enc
+from repro.core.objective import (Constraint, route, routing_scores,
+                                  size_constraint, recency_constraint)
+
+
+def _library(sizes=(100, 200, 400)):
+    lib = ModelLibrary([
+        ExpertSpec(f"e{i}", _enc(f"e{i}", 2, 64, 2, 128, 64), {}, 0.5)
+        for i in range(len(sizes))])
+    for i, s in enumerate(sizes):
+        lib.experts[i].n_params = s
+    return lib
+
+
+def test_lambda_zero_is_pure_argmin():
+    pred = np.array([[0.3, 0.1, 0.5], [0.9, 0.8, 0.2]])
+    c = size_constraint(_library())
+    assert list(np.asarray(route(pred, [c], [0.0]))) == [1, 2]
+
+
+def test_constraint_shifts_choice():
+    lib = _library()
+    pred = np.array([[0.30, 0.31, 0.29]])  # near-tie, biggest model best
+    c = size_constraint(lib)
+    assert int(route(pred)[0]) == 2
+    assert int(route(pred, [c], [1.0])[0]) == 0  # strong size penalty
+
+
+floats = st.floats(min_value=0.0, max_value=10.0, allow_nan=False,
+                   width=32)
+
+
+@given(pred=st.lists(st.lists(floats, min_size=3, max_size=3),
+                     min_size=1, max_size=8),
+       lam=st.floats(min_value=0.0, max_value=32.0, allow_nan=False))
+@settings(max_examples=50, deadline=None)
+def test_size_lambda_monotonicity(pred, lam):
+    """Property (Pareto premise): increasing the size-penalty weight never
+    increases the size of the selected model."""
+    lib = _library()
+    c = size_constraint(lib)
+    pred = np.array(pred, np.float64)
+    sizes = lib.sizes()
+    pick_lo = np.asarray(route(pred, [c], [lam]))
+    pick_hi = np.asarray(route(pred, [c], [lam * 2 + 1.0]))
+    assert (sizes[pick_hi] <= sizes[pick_lo] + 1e-9).all()
+
+
+@given(pred=st.lists(st.lists(floats, min_size=4, max_size=4),
+                     min_size=1, max_size=6),
+       lam=st.floats(min_value=0.0, max_value=8.0, allow_nan=False))
+@settings(max_examples=40, deadline=None)
+def test_routing_permutation_equivariance(pred, lam):
+    """Permuting the model library permutes the routing decision."""
+    pred = np.array(pred, np.float64)
+    cvals = np.array([0.1, 0.5, 0.9, 0.3])
+    c = Constraint("x", cvals)
+    perm = np.array([2, 0, 3, 1])
+    c_p = Constraint("x", cvals[perm])
+    s1 = np.asarray(routing_scores(pred, [c], [lam]))
+    s2 = np.asarray(routing_scores(pred[:, perm], [c_p], [lam]))
+    np.testing.assert_allclose(s1[:, perm], s2, rtol=1e-9)
+
+
+@given(pred=st.lists(st.lists(floats, min_size=3, max_size=3),
+                     min_size=2, max_size=8))
+@settings(max_examples=40, deadline=None)
+def test_oracle_lower_bounds_any_policy(pred):
+    """The oracle (argmin of true loss) achieves <= loss of any policy."""
+    q = np.array(pred, np.float64)
+    oracle = q.min(axis=1)
+    for policy in range(3):
+        assert (oracle <= q[:, policy] + 1e-12).all()
+
+
+def test_objective_additivity():
+    pred = np.random.default_rng(0).uniform(size=(5, 3))
+    c1 = Constraint("a", np.array([0.1, 0.2, 0.3]))
+    c2 = Constraint("b", np.array([0.5, 0.0, 0.5]))
+    s = np.asarray(routing_scores(pred, [c1, c2], [2.0, 3.0]))
+    expected = pred + 2.0 * c1.values + 3.0 * c2.values
+    np.testing.assert_allclose(s, expected, rtol=1e-6)
+
+
+def test_router_predicts_positive_losses(key):
+    from repro.core.router import RouterConfig, init_router, predict_losses
+    import jax
+    rc = RouterConfig(n_models=5, vocab_size=64, num_layers=2, d_model=32,
+                      num_heads=2, d_ff=64)
+    p, _ = init_router(key, rc)
+    toks = jax.random.randint(key, (3, 16), 1, 64)
+    pred = predict_losses(p, rc, {"tokens": toks})
+    assert pred.shape == (3, 5)
+    assert bool((pred >= 0).all())
+
+
+def test_router_kernel_path_matches_xla(key):
+    import jax
+    from repro.core.router import RouterConfig, init_router, predict_losses
+    rc = RouterConfig(n_models=4, vocab_size=64, num_layers=2, d_model=32,
+                      num_heads=2, d_ff=64)
+    p, _ = init_router(key, rc)
+    toks = jax.random.randint(key, (5, 16), 1, 64)
+    a = predict_losses(p, rc, {"tokens": toks}, use_kernel=False)
+    b = predict_losses(p, rc, {"tokens": toks}, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

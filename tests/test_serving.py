@@ -1,0 +1,97 @@
+"""Serving-engine invariants (incl. hypothesis property tests)."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.library import ExpertSpec, ModelLibrary, _enc
+from repro.core.objective import recency_constraint, size_constraint
+from repro.core.router import RouterConfig, init_router
+from repro.data.batching import mlm_batch
+from repro.serving import Request, TryageEngine, parse_flags
+
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    """Engine over 3 untrained tiny experts (routing still well-defined)."""
+    lib = ModelLibrary([
+        ExpertSpec("small", _enc("small", 1, 32, 2, 64, 64), {}, 0.5),
+        ExpertSpec("mid", _enc("mid", 1, 48, 2, 96, 64), {}, 0.5),
+        ExpertSpec("big", _enc("big", 2, 64, 2, 128, 64), {}, 0.9),
+    ])
+    from repro.models.model import count_params, init_model
+    for i, e in enumerate(lib.experts):
+        e.params, _ = init_model(jax.random.PRNGKey(i), e.cfg)
+        e.n_params = count_params(e.params)
+    rc = RouterConfig(n_models=3, vocab_size=64, num_layers=1, d_model=32,
+                      num_heads=2, d_ff=64)
+    rp, _ = init_router(jax.random.PRNGKey(9), rc)
+    return TryageEngine(lib, rp, rc,
+                        [size_constraint(lib), recency_constraint(lib)],
+                        max_batch=8)
+
+
+def _requests(n, seed=0, lam=None):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(4, 64, size=(n, 32)).astype(np.int32)
+    mb = mlm_batch(toks, rng, 0.2, 64)
+    return [Request(uid=i, tokens=mb["tokens"][i], targets=mb["targets"][i],
+                    mask=mb["mask"][i], lambdas=lam or {})
+            for i in range(n)]
+
+
+def test_every_request_served_exactly_once(tiny_engine):
+    reqs = _requests(21, seed=1)
+    for r in reqs:
+        tiny_engine.submit(r)
+    results = tiny_engine.run()
+    assert sorted(r.uid for r in results) == list(range(21))
+    assert not tiny_engine.queue
+
+
+def test_size_flag_shrinks_selected_models(tiny_engine):
+    sizes = {e.name: e.n_params for e in tiny_engine.library.experts}
+    for r in _requests(16, seed=2):
+        tiny_engine.submit(r)
+    plain = tiny_engine.run()
+    for r in _requests(16, seed=2, lam={"size": 50.0}):
+        tiny_engine.submit(r)
+    constrained = tiny_engine.run()
+    mean_plain = np.mean([sizes[r.expert] for r in plain])
+    mean_constr = np.mean([sizes[r.expert] for r in constrained])
+    assert mean_constr <= mean_plain
+    assert all(r.expert == "small" for r in constrained)
+
+
+def test_results_carry_predictions_and_flops(tiny_engine):
+    for r in _requests(5, seed=3):
+        tiny_engine.submit(r)
+    for res in tiny_engine.run():
+        assert res.pred_losses.shape == (3,)
+        assert res.predictions.shape == (32,)
+        assert res.flops_proxy > 0
+        assert res.accuracy is None or 0.0 <= res.accuracy <= 1.0
+
+
+def test_stats_accounting(tiny_engine):
+    tiny_engine.stats.served = 0
+    tiny_engine.stats.per_expert.clear()
+    for r in _requests(12, seed=4):
+        tiny_engine.submit(r)
+    tiny_engine.run()
+    assert tiny_engine.stats.served == 12
+    assert sum(tiny_engine.stats.per_expert.values()) == 12
+
+
+@given(st.lists(st.sampled_from(
+    ["", "[Flag: Smallest model]", "[Flag: small model]",
+     "[Flag: Newest model]", "x [flag: smallest model] y"]),
+    min_size=1, max_size=5))
+@settings(max_examples=25, deadline=None)
+def test_parse_flags_properties(texts):
+    lam = parse_flags(" ".join(texts))
+    assert all(v >= 0 for v in lam.values())
+    assert set(lam) <= {"size", "recency"}
+    if any("mallest" in t for t in texts):
+        assert lam.get("size", 0) >= 8.0

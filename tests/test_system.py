@@ -1,0 +1,134 @@
+"""End-to-end behaviour tests for the Tryage system (integration scale:
+small models, real training, real routing)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.library import ExpertSpec, ModelLibrary, _enc, _mix
+from repro.core.qtable import build_q_table, mlm_accuracy
+from repro.core.router import RouterConfig, init_router, predict_losses
+from repro.core.training import train_library, train_router
+from repro.core.experiment import _eval_batches
+from repro.data.corpus import DOMAINS, DomainCorpus
+
+
+@pytest.fixture(scope="module")
+def system(corpus):
+    """Two specialists + a generalist, lightly trained; router trained on
+    their Q-table.  Slow-ish (~2-3 min) but exercises the whole paper."""
+    lib = ModelLibrary([
+        ExpertSpec("gen", _enc("gen", 2, 96, 2, 192, 512),
+                   {d: 1 / 8 for d in DOMAINS}),
+        ExpertSpec("code", _enc("code", 2, 96, 2, 192, 512),
+                   _mix("github", "stackexchange", w=0.9)),
+        ExpertSpec("patent", _enc("patent", 2, 96, 2, 192, 512),
+                   _mix("uspto", "freelaw", w=0.9)),
+    ])
+    train_library(lib, corpus, steps=120, verbose=False)
+    uniform = {d: 1 / 8 for d in DOMAINS}
+    train_b = _eval_batches(corpus, uniform, 384, 128, 11)
+    val_b = _eval_batches(corpus, uniform, 96, 128, 12)
+    test_b = []
+    for di, d in enumerate(DOMAINS):
+        test_b += _eval_batches(corpus, {d: 1.0}, 24, 128, 13 + di)
+    q_train = build_q_table(lib, train_b)
+    q_val = build_q_table(lib, val_b)
+    q_test = build_q_table(lib, test_b)
+    rc = RouterConfig(n_models=3, vocab_size=512, num_layers=2, d_model=96)
+    rp, _ = init_router(jax.random.PRNGKey(5), rc)
+    cat = lambda bs: np.concatenate([b["tokens"] for b in bs])
+    # at integration scale (384 prompts) the paper's lr=5e-5 undertrains;
+    # use the same recipe the unit tests validated (lr 3e-4, 12 epochs)
+    rp, log = train_router(
+        rp, rc, {"tokens": cat(train_b), "loss": q_train["loss"]},
+        {"tokens": cat(val_b), "loss": q_val["loss"]},
+        epochs=12, lr=3e-4, verbose=False)
+    test_tokens = cat(test_b)
+    pred = np.asarray(jax.jit(
+        lambda t: predict_losses(rp, rc, {"tokens": t}))(test_tokens))
+    return dict(lib=lib, q_test=q_test, q_train=q_train, pred=pred,
+                log=log, rc=rc, rp=rp, test_tokens=test_tokens,
+                corpus=corpus)
+
+
+def test_experts_are_differential(system):
+    """Fig.-2 premise: the code specialist beats the patent specialist on
+    github prompts and vice versa."""
+    q, doms = system["q_test"], system["q_test"]["domain"]
+    gh = doms == DOMAINS.index("github")
+    us = doms == DOMAINS.index("uspto")
+    acc = q["acc"]
+    assert acc[gh, 1].mean() > acc[gh, 2].mean() + 0.02   # code > patent on gh
+    assert acc[us, 2].mean() > acc[us, 1].mean() + 0.02   # patent > code on uspto
+
+
+def test_router_training_converged(system):
+    log = system["log"]
+    assert log.val_loss[-1] <= log.val_loss[0]
+    assert log.best_val < log.val_loss[0]
+
+
+def test_router_beats_random_and_single_model(system):
+    from repro.core import baselines as bl
+    q, pred = system["q_test"], system["pred"]
+    N = len(pred)
+    tryage = pred.argmin(1)
+    rand = bl.random_router(N, 3, 0)
+    acc_t = mlm_accuracy(q, tryage)
+    acc_r = mlm_accuracy(q, rand)
+    assert acc_t > acc_r + 0.01
+    sel_t = bl.selection_accuracy(tryage, q)
+    sel_r = bl.selection_accuracy(rand, q)
+    assert sel_t > sel_r
+
+
+def test_tryage_near_oracle(system):
+    from repro.core import baselines as bl
+    q, pred = system["q_test"], system["pred"]
+    acc_oracle = mlm_accuracy(q, bl.oracle_choices(q))
+    acc_t = mlm_accuracy(q, pred.argmin(1))
+    best_single = max(mlm_accuracy(q, np.full(len(pred), i))
+                      for i in range(3))
+    # aggregate >= best single model within tolerance; at this reduced
+    # integration scale (3 lightly-trained experts, 24 prompts/domain) the
+    # router sits within a few points of the best expert — the full-scale
+    # claim (Tryage 0.323 vs oracle 0.346, above every expert) is
+    # validated by repro.core.experiment / benchmarks fig3cd.
+    assert acc_t >= best_single - 0.04
+    # the LOSS-oracle is not accuracy-optimal (min-loss model can have
+    # lower masked-token accuracy); the true upper bound is the
+    # accuracy-oracle
+    acc_upper = float(q["acc"].max(axis=1).mean())
+    assert acc_t <= acc_upper + 1e-9
+
+
+def test_pareto_tradeoff(system):
+    from repro.core.objective import size_constraint
+    from repro.core.pareto import pareto_sweep
+    front = pareto_sweep(system["pred"], system["q_test"], system["lib"],
+                         size_constraint(system["lib"]))
+    rows = front["rows"]
+    # mean selected size is non-increasing in lambda
+    sizes = [r["mean_size"] for r in rows]
+    assert all(s2 <= s1 + 1e-6 for s1, s2 in zip(sizes, sizes[1:]))
+    # extreme lambda routes everything to the smallest model
+    smallest = system["lib"].sizes().min()
+    assert abs(rows[-1]["mean_size"] - smallest) < 1e-6
+
+
+def test_e2e_cotraining_improves_routed_loss(system, corpus):
+    from repro.core.e2e import cotrain
+    st = cotrain(system["lib"], system["rp"], system["rc"], corpus,
+                 steps=12, batch=16, seed=3)
+    first = np.mean([h["routed_loss"] for h in st.history[:3]])
+    last = np.mean([h["routed_loss"] for h in st.history[-3:]])
+    assert last <= first + 0.05  # co-training must not regress
+
+
+def test_qtable_shapes(system):
+    q = system["q_test"]
+    N = len(system["pred"])
+    assert q["loss"].shape == (N, 3) and q["acc"].shape == (N, 3)
+    assert np.isfinite(q["loss"]).all()
+    assert ((q["acc"] >= 0) & (q["acc"] <= 1)).all()
