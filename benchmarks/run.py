@@ -13,6 +13,7 @@ experiment is run automatically.
   fig5      Pareto front (lambda sweep)
   router_eps  loss-prediction epsilon (paper: ~0.1)
   kernels   Pallas kernel microbenches (us/call, interpret mode)
+  router_decision  router-decision throughput, fused kernel vs host path
   serving   engine throughput on batched requests
 """
 
@@ -159,6 +160,57 @@ def bench_kernels(res):
     return rows
 
 
+def bench_router_decision(res):
+    """Router-decision throughput, fused Pallas path vs host reference
+    path, on a 256-request mixed-flag workload (choices must agree)."""
+    import jax
+    from repro.core.library import ExpertSpec, ModelLibrary, _enc
+    from repro.core.objective import recency_constraint, size_constraint
+    from repro.core.router import RouterConfig, init_router
+    from repro.models.model import count_params, init_model
+    from repro.serving import Request, TryageEngine
+
+    lib = ModelLibrary([
+        ExpertSpec("small", _enc("small", 1, 32, 2, 64, 64), {}, 0.5),
+        ExpertSpec("mid", _enc("mid", 1, 48, 2, 96, 64), {}, 0.5),
+        ExpertSpec("big", _enc("big", 2, 64, 2, 128, 64), {}, 0.9),
+    ])
+    for i, e in enumerate(lib.experts):
+        e.params, _ = init_model(jax.random.PRNGKey(i), e.cfg)
+        e.n_params = count_params(e.params)
+    rc = RouterConfig(n_models=3, vocab_size=64, num_layers=1, d_model=32,
+                      num_heads=2, d_ff=64)
+    rp, _ = init_router(jax.random.PRNGKey(9), rc)
+    cons = [size_constraint(lib), recency_constraint(lib)]
+
+    rng = np.random.default_rng(0)
+    toks = rng.integers(4, 64, size=(256, 64)).astype(np.int32)
+    flag_mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
+    reqs = [Request(uid=i, tokens=toks[i],
+                    lambdas=flag_mix[i % len(flag_mix)])
+            for i in range(256)]
+    batches = [reqs[i:i + 32] for i in range(0, 256, 32)]
+
+    rows, choices = [], {}
+    for name, use_kernel in [("host", False), ("fused", True)]:
+        eng = TryageEngine(lib, rp, rc, cons, max_batch=32,
+                           use_kernel=use_kernel)
+        eng._route_batch(batches[0])  # compile
+        t0 = time.time()
+        ch = []
+        for b in batches:
+            _, c = eng._route_batch(b)
+            ch.append(c)
+        dt = time.time() - t0
+        choices[name] = np.concatenate(ch)
+        rows.append((f"router_decision/{name}_req_per_s", 256 / dt,
+                     "256 reqs warm, batch 32"))
+    match = float((choices["host"] == choices["fused"]).mean())
+    rows.append(("router_decision/choice_match", match,
+                 "fused vs host, must be 1"))
+    return rows
+
+
 def bench_serving(res):
     from repro.core import experiment as ex
     from repro.core.objective import size_constraint, recency_constraint
@@ -190,7 +242,8 @@ def bench_serving(res):
 
 
 BENCHES = [bench_fig2, bench_fig3a, bench_fig3a_mixed, bench_fig3b, bench_fig3cd, bench_fig4,
-           bench_fig5, bench_router_eps, bench_kernels, bench_serving]
+           bench_fig5, bench_router_eps, bench_kernels,
+           bench_router_decision, bench_serving]
 
 
 def main() -> None:

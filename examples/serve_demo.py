@@ -30,9 +30,13 @@ except FileNotFoundError:
 
 lib, rp, rc, corpus = (art["library"], art["router_params"], art["rc"],
                        art["corpus"])
+# use_kernel=True: head -> softplus -> constraint add -> argmin run fused
+# in the Pallas kernel (embedding stays in XLA, all inside one jit);
+# buckets=True pads expert micro-batches to power-of-two shapes so jit
+# compiles a bounded shape set.
 engine = TryageEngine(lib, rp, rc,
                       [size_constraint(lib), recency_constraint(lib)],
-                      max_batch=32)
+                      max_batch=32, use_kernel=True, buckets=True)
 
 # flags arrive as natural-language markers, exactly as in the paper
 print("flag parsing:", parse_flags("what is X [Flag: Smallest model]"))
@@ -49,7 +53,10 @@ for i in range(96):
 
 results = engine.run()
 accs = [r.accuracy for r in results if r.accuracy is not None]
+losses = [r.loss for r in results if r.loss is not None]
 print(f"served {len(results)} requests, mean masked-token accuracy "
-      f"{np.mean(accs):.3f}")
+      f"{np.mean(accs):.3f}, mean masked NLL {np.mean(losses):.3f}")
 print("allocation:", dict(engine.stats.per_expert))
+print("buckets:", dict(engine.stats.bucket_hits),
+      "padded rows:", engine.stats.padded_rows)
 print("total FLOPs proxy:", f"{engine.stats.total_flops:.3g}")

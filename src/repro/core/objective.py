@@ -45,6 +45,18 @@ def recency_constraint(library: ModelLibrary) -> Constraint:
     return Constraint("recency", 1.0 - library.recencies())
 
 
+def constraint_matrix(constraints: Sequence[Constraint],
+                      n_models: int) -> np.ndarray:
+    """Stack constraint value vectors into the (n_c, M) matrix the fused
+    router kernel consumes.  With no constraints, returns one zero row so
+    the kernel's BlockSpec stays well-formed (the matching lambda column
+    is zero too, so the decision is unaffected).
+    """
+    if not constraints:
+        return np.zeros((1, n_models), np.float32)
+    return np.stack([np.asarray(c.values, np.float32) for c in constraints])
+
+
 def routing_scores(pred_losses, constraints: Sequence[Constraint],
                    lambdas: Sequence[float]):
     """(…, n_models) combined routing loss L_R."""

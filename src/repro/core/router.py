@@ -79,16 +79,19 @@ def router_embed(params, rc: RouterConfig, batch, use_kernel=False):
     return _pool(hidden, batch["tokens"])
 
 
-def predict_losses(params, rc: RouterConfig, batch, use_kernel=False):
+def predict_losses(params, rc: RouterConfig, batch, use_kernel=False,
+                   interpret=None):
     """Predicted per-expert losses L-hat (B, n_models), in log-loss units.
 
     softplus keeps predictions positive (losses are non-negative), which
-    stabilizes early training against the MSE divergence.
+    stabilizes early training against the MSE divergence.  ``interpret``
+    follows the kernel convention: None = compiled on TPU/GPU, interpret
+    on CPU.
     """
     emb = router_embed(params, rc, batch)
     if use_kernel:
         from repro.kernels.router_score import ops as rs_ops
-        return rs_ops.router_head(emb, params["head"])
+        return rs_ops.router_head(emb, params["head"], interpret=interpret)
     h = jax.nn.gelu(emb @ params["head"]["w1"] + params["head"]["b1"])
     raw = h @ params["head"]["w2"] + params["head"]["b2"]
     return jax.nn.softplus(raw)

@@ -6,7 +6,26 @@
   mlstm_scan/       chunkwise-parallel mLSTM recurrence (xLSTM family)
 
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-public wrapper) and ref.py (pure-jnp oracle).  On this CPU container they
-are validated with interpret=True; on TPU the same BlockSpecs give
-VMEM-resident tiles with MXU-aligned (128-multiple) matmul dims.
+public wrapper) and ref.py (pure-jnp oracle).  Kernels compile on TPU/GPU
+and fall back to interpret mode on CPU via ``default_interpret``; on TPU
+the same BlockSpecs give VMEM-resident tiles with MXU-aligned
+(128-multiple) matmul dims.
 """
+
+from __future__ import annotations
+
+import jax
+
+_COMPILED_BACKENDS = ("tpu", "gpu")
+
+
+def default_interpret(interpret: bool | None = None) -> bool:
+    """Resolve an ``interpret`` argument for ``pl.pallas_call``.
+
+    ``None`` means backend-detected: compiled where Pallas has a real
+    lowering (TPU Mosaic, GPU Triton), interpret fallback on CPU.  An
+    explicit bool always wins, so tests can force either mode.
+    """
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() not in _COMPILED_BACKENDS

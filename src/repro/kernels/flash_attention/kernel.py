@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
+
 NEG_INF = -2.3819763e38
 
 
@@ -31,10 +33,12 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
 
     def body(kb, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.ds(kb * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.ds(kb * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
+        # leading dim indexed with pl.ds(0, 1), not a python int: interpret
+        # mode's load discharge rejects scalar int indices inside fori_loop
+        k = pl.load(k_ref, (pl.ds(0, 1), pl.ds(kb * block_k, block_k),
+                            slice(None)))[0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.ds(0, 1), pl.ds(kb * block_k, block_k),
+                            slice(None)))[0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
         if softcap > 0:
             s = softcap * jnp.tanh(s / softcap)
@@ -64,8 +68,9 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "softcap", "block_q", "block_k", "interpret"))
 def flash_attention_bhsd(q, k, v, *, causal=True, window=0, softcap=0.0,
-                         block_q=128, block_k=128, interpret=True):
+                         block_q=128, block_k=128, interpret=None):
     """q/k/v: (BH, S, hd) with identical head counts. Returns (BH, S, hd)."""
+    interpret = default_interpret(interpret)
     BH, S, hd = q.shape
     T = k.shape[1]
     block_q = min(block_q, S)

@@ -8,7 +8,7 @@ from repro.kernels.flash_attention.kernel import flash_attention_bhsd
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
-                    block_q=128, block_k=128, interpret=True):
+                    block_q=128, block_k=128, interpret=None):
     """q: (B, S, H, hd); k/v: (B, T, KV, hd) with H % KV == 0.
 
     Returns (B, S, H, hd).  GQA is handled by repeating K/V heads before

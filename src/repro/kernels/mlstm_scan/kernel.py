@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
+
 NEG_INF = -1e30
 
 
@@ -39,12 +41,16 @@ def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, c0_ref, n0_ref, m0_ref,
 
     def body(ci, carry):
         C, n, m = carry                                   # (dh,dh),(dh,),()
-        sl = (0, pl.ds(ci * chunk, chunk), slice(None))
-        q = pl.load(q_ref, sl)[...] * scale               # (L, dh)
-        k = pl.load(k_ref, sl)[...]
-        v = pl.load(v_ref, sl)[...]
-        ig = pl.load(i_ref, (0, pl.ds(ci * chunk, chunk)))[...]   # (L,)
-        fg = pl.load(f_ref, (0, pl.ds(ci * chunk, chunk)))[...]
+        # leading dim indexed with pl.ds(0, 1), not a python int: interpret
+        # mode's load/store discharge rejects scalar ints inside fori_loop
+        sl = (pl.ds(0, 1), pl.ds(ci * chunk, chunk), slice(None))
+        q = pl.load(q_ref, sl)[0] * scale                 # (L, dh)
+        k = pl.load(k_ref, sl)[0]
+        v = pl.load(v_ref, sl)[0]
+        ig = pl.load(i_ref, (pl.ds(0, 1),
+                             pl.ds(ci * chunk, chunk)))[0]        # (L,)
+        fg = pl.load(f_ref, (pl.ds(0, 1),
+                             pl.ds(ci * chunk, chunk)))[0]
 
         lf = jax.nn.log_sigmoid(fg)
         F = jnp.cumsum(lf)                                # inclusive (L,)
@@ -70,7 +76,7 @@ def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, c0_ref, n0_ref, m0_ref,
         den = den + WS.sum(axis=1)
 
         h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[:, None]
-        pl.store(h_ref, sl, h.astype(h_ref.dtype))
+        pl.store(h_ref, sl, h[None].astype(h_ref.dtype))
 
         # end-of-chunk state
         m_last = m_t[-1]
@@ -91,9 +97,10 @@ def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, c0_ref, n0_ref, m0_ref,
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def mlstm_chunkwise_bh(q, k, v, i_pre, f_pre, C0, n0, m0, *, chunk=64,
-                       interpret=True):
+                       interpret=None):
     """q/k/v: (BH, S, dh) f32; i/f: (BH, S); C0 (BH, dh, dh); n0 (BH, dh);
     m0 (BH,).  Returns (h (BH, S, dh), C1, n1, m1)."""
+    interpret = default_interpret(interpret)
     BH, S, dh = q.shape
     chunk = min(chunk, S)
     assert S % chunk == 0

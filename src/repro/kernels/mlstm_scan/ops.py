@@ -8,7 +8,7 @@ from repro.kernels.mlstm_scan.kernel import mlstm_chunkwise_bh
 
 
 def mlstm_chunkwise(q, k, v, i_pre, f_pre, state, *, chunk=64,
-                    interpret=True):
+                    interpret=None):
     """q/k/v: (B, S, H, dh) f32; i/f: (B, S, H); state: {"C","n","m"}.
 
     Returns (h (B, S, H, dh), new_state).

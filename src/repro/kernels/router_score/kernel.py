@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
+
 
 def _router_kernel(emb_ref, w1_ref, b1_ref, w2_ref, b2_ref, cvals_ref,
                    lam_ref, scores_ref, choice_ref):
@@ -38,11 +40,13 @@ def _router_kernel(emb_ref, w1_ref, b1_ref, w2_ref, b2_ref, cvals_ref,
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def router_score_fused(emb, w1, b1, w2, b2, cvals, lam, *, block_b=128,
-                       interpret=True):
+                       interpret=None):
     """emb (B, d); cvals (n_c, M); lam (B, n_c).
 
-    Returns (pred_losses (B, M) f32, choice (B,) int32).
+    Returns (pred_losses (B, M) f32, choice (B,) int32).  ``interpret=None``
+    picks compiled on TPU/GPU, interpret on CPU.
     """
+    interpret = default_interpret(interpret)
     B, d = emb.shape
     M = w2.shape[1]
     n_c = cvals.shape[0]

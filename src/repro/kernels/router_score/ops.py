@@ -3,12 +3,11 @@
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.router_score.kernel import router_score_fused
 
 
-def router_head(emb, head_params, interpret=True):
+def router_head(emb, head_params, interpret=None):
     """Predicted losses only (no constraints)."""
     M = head_params["w2"].shape[1]
     cvals = jnp.zeros((1, M), jnp.float32)
@@ -19,10 +18,18 @@ def router_head(emb, head_params, interpret=True):
     return pred
 
 
-def router_route(emb, head_params, constraints, lambdas, interpret=True):
-    """Full fused decision. constraints: (n_c, M) np/jnp; lambdas: (B, n_c)."""
+def router_route(emb, head_params, constraints, lambdas, *, block_b=128,
+                 interpret=None):
+    """Full fused decision: one Pallas program per batch tile computes
+    MLP head -> softplus -> per-request lambda-weighted constraint add ->
+    argmin, with no host round-trip between scoring and selection.
+
+    constraints: (n_c, M) np/jnp; lambdas: (B, n_c).
+    Returns (pred_losses (B, M) f32, choice (B,) int32).
+    """
     pred, choice = router_score_fused(
         emb, head_params["w1"], head_params["b1"], head_params["w2"],
         head_params["b2"], jnp.asarray(constraints, jnp.float32),
-        jnp.asarray(lambdas, jnp.float32), interpret=interpret)
+        jnp.asarray(lambdas, jnp.float32), block_b=block_b,
+        interpret=interpret)
     return pred, choice

@@ -108,6 +108,9 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            # older jax returns a one-element list of dicts per device
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
     except Exception as e:  # noqa: BLE001 — record the failure verbatim
         rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",

@@ -78,10 +78,39 @@ class CompStats:
     whiles: list = dataclasses.field(default_factory=list)  # (body, cond)
 
 
+def _split_operands(args: str) -> list:
+    """Split an operand list on top-level commas only — shapes like
+    ``f32[4,8]{1,0}`` carry commas inside brackets/braces."""
+    out, cur, depth = [], [], 0
+    for ch in args:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return out
+
+
+def _operand_dims(operand: str, symbols: dict):
+    """Dims of one operand: inline shape ('f32[4,8]{1,0} %x') if present,
+    else symbol-table lookup of the bare name ('%x')."""
+    m = _SHAPE_RE.search(operand)
+    if m:
+        return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return symbols.get(operand.split()[-1].lstrip("%"))
+
+
 def _parse_dot_flops(rhs: str, symbols: dict) -> float:
     """rhs: '<out type> dot(<operands>), ..., lhs_contracting_dims={..}'.
 
-    Operands are bare names; shapes resolved via the symbol table.
+    Operands carry inline shapes (newer XLA text) or are bare names
+    resolved via the symbol table.
     """
     out_dt, out_shape = _first_shape(rhs)
     if out_shape is None:
@@ -89,17 +118,8 @@ def _parse_dot_flops(rhs: str, symbols: dict) -> float:
     m = re.search(r"dot\((.*?)\)", rhs)
     if not m:
         return 0.0
-    operands = [o.strip() for o in m.group(1).split(",")]
-    lhs_dims = None
-    if operands:
-        name = operands[0].split()[-1].lstrip("%")
-        lhs_dims = symbols.get(name)
-        if lhs_dims is None:
-            # operand may carry an inline shape
-            shapes = _SHAPE_RE.findall(operands[0])
-            if shapes:
-                lhs_dims = [int(d) for d in shapes[0][1].split(",")] \
-                    if shapes[0][1] else []
+    operands = _split_operands(m.group(1))
+    lhs_dims = _operand_dims(operands[0], symbols) if operands else None
     if lhs_dims is None:
         return 0.0
     mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
@@ -182,9 +202,8 @@ def parse_hlo(hlo: str):
             # operand reads (weights re-read every loop iteration)
             m2 = re.search(r"dot\((.*?)\)", rhs)
             if m2:
-                for o in m2.group(1).split(","):
-                    nm = o.strip().split()[-1].lstrip("%")
-                    dims = symbols.get(nm)
+                for o in _split_operands(m2.group(1)):
+                    dims = _operand_dims(o, symbols)
                     if dims:
                         n = 1
                         for d in dims:

@@ -1,10 +1,13 @@
 """Serving driver: bring up a TryageEngine over the trained library and
 push batched requests through it (the paper's kind of end-to-end driver).
 
-  PYTHONPATH=src python -m repro.launch.serve --requests 256 [--fast]
+  PYTHONPATH=src python -m repro.launch.serve --requests 256 [--fast] \
+      [--use-kernel] [--no-buckets]
 
-Loads artifacts from experiments/tryage if present, otherwise trains a
-reduced library first.
+--use-kernel routes every decision through the fused Pallas head
+(compiled on TPU/GPU, interpret on CPU); --no-buckets disables the
+power-of-two padding of per-expert micro-batches.  Loads artifacts from
+experiments/tryage if present, otherwise trains a reduced library first.
 """
 
 from __future__ import annotations
@@ -22,6 +25,10 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--max-batch", type=int, default=32)
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="fused Pallas router decision path")
+    ap.add_argument("--no-buckets", action="store_true",
+                    help="disable power-of-two expert micro-batch padding")
     args = ap.parse_args()
 
     from repro.core import experiment as ex
@@ -43,7 +50,9 @@ def main():
                            art["corpus"])
     eng = TryageEngine(lib, rp, rc,
                        [size_constraint(lib), recency_constraint(lib)],
-                       max_batch=args.max_batch)
+                       max_batch=args.max_batch,
+                       use_kernel=args.use_kernel,
+                       buckets=not args.no_buckets)
 
     rng = np.random.default_rng(0)
     uniform = {d: 1.0 / 8 for d in corpus.tables}
@@ -58,11 +67,14 @@ def main():
     results = eng.run()
     dt = time.time() - t0
     accs = [r.accuracy for r in results if r.accuracy is not None]
+    losses = [r.loss for r in results if r.loss is not None]
     print(json.dumps({
         "requests": len(results),
+        "router_path": "fused-kernel" if args.use_kernel else "host",
         "wall_s": round(dt, 2),
         "req_per_s": round(len(results) / dt, 1),
         "mean_mlm_accuracy": round(float(np.mean(accs)), 4),
+        "mean_mlm_loss": round(float(np.mean(losses)), 4),
         "engine": eng.stats.summary(),
     }, indent=1))
 

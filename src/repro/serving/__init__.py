@@ -1,4 +1,6 @@
-from repro.serving.engine import TryageEngine, EngineStats
-from repro.serving.requests import Request, Result, parse_flags
+from repro.serving.engine import TryageEngine, EngineStats, bucket_size
+from repro.serving.requests import (Request, Result, lambda_matrix,
+                                    parse_flags)
 
-__all__ = ["TryageEngine", "EngineStats", "Request", "Result", "parse_flags"]
+__all__ = ["TryageEngine", "EngineStats", "Request", "Result",
+           "bucket_size", "lambda_matrix", "parse_flags"]

@@ -7,6 +7,23 @@ routing objective (with per-request lambda weights from user flags) picks
 an expert per prompt, prompts are grouped into per-expert micro-batches and
 executed, and results stream back with measured loss/accuracy plus a FLOPs
 proxy for the cost/performance telemetry that the Pareto analysis consumes.
+
+Two decision paths exist:
+
+  use_kernel=True   one jit'd decision function per batch: the encoder
+                    embedding runs in XLA, then MLP head -> softplus ->
+                    lambda-weighted constraint add -> argmin run fused in
+                    the Pallas kernel (``router_score_fused`` via
+                    ``ops.router_route``), compiled on TPU/GPU, interpret
+                    fallback on CPU.  No host round-trip between scoring
+                    and selection.
+  use_kernel=False  reference path: XLA head + NumPy constraint add on
+                    the host (kept for parity checks and benchmarking).
+
+Expert micro-batches are padded to power-of-two buckets (``buckets=True``)
+so the jit'd expert functions see a bounded set of shapes instead of
+recompiling for every ragged batch size; bucket occupancy is tracked in
+``EngineStats``.
 """
 
 from __future__ import annotations
@@ -22,10 +39,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.library import ModelLibrary
-from repro.core.objective import Constraint
-from repro.core.router import RouterConfig, predict_losses
+from repro.core.objective import Constraint, constraint_matrix
+from repro.core.router import RouterConfig, predict_losses, router_embed
+from repro.kernels.router_score import ops as rs_ops
 from repro.models.model import forward
-from repro.serving.requests import Request, Result
+from repro.serving.requests import Request, Result, lambda_matrix
+
+
+def bucket_size(n: int) -> int:
+    """Smallest power of two >= n — the padded micro-batch shape."""
+    return 1 << (n - 1).bit_length() if n > 1 else 1
 
 
 @dataclasses.dataclass
@@ -36,19 +59,28 @@ class EngineStats:
     total_flops: float = 0.0
     router_time_s: float = 0.0
     expert_time_s: float = 0.0
+    # shape-bucketing telemetry: padded micro-batch size -> launch count,
+    # plus the total number of padded (wasted) rows executed.
+    bucket_hits: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    padded_rows: int = 0
 
     def summary(self) -> dict:
         return {"served": self.served,
                 "per_expert": dict(self.per_expert),
                 "total_flops": self.total_flops,
                 "router_time_s": round(self.router_time_s, 3),
-                "expert_time_s": round(self.expert_time_s, 3)}
+                "expert_time_s": round(self.expert_time_s, 3),
+                "bucket_hits": {int(k): v for k, v in
+                                sorted(self.bucket_hits.items())},
+                "padded_rows": self.padded_rows}
 
 
 class TryageEngine:
     def __init__(self, library: ModelLibrary, router_params,
                  rc: RouterConfig, constraints: Sequence[Constraint] = (),
-                 max_batch: int = 16, use_kernel: bool = False):
+                 max_batch: int = 16, use_kernel: bool = False,
+                 interpret: bool | None = None, buckets: bool = True):
         assert len(library) == rc.n_models
         self.library = library
         self.router_params = router_params
@@ -56,39 +88,120 @@ class TryageEngine:
         self.constraints = list(constraints)
         self.max_batch = max_batch
         self.use_kernel = use_kernel
+        self.buckets = buckets
         self.queue: list[Request] = []
         self.stats = EngineStats()
 
-        self._score = jax.jit(
-            lambda p, toks: predict_losses(p, rc, {"tokens": toks},
-                                           use_kernel=use_kernel))
+        self._cnames = [c.name for c in self.constraints]
+        self._cmat = constraint_matrix(self.constraints, rc.n_models)
+
+        if use_kernel:
+            cmat = self._cmat
+
+            def _decide(p, toks, lam):
+                emb = router_embed(p, rc, {"tokens": toks})
+                return rs_ops.router_route(emb, p["head"], cmat, lam,
+                                           interpret=interpret)
+
+            self._decide = jax.jit(_decide)
+        else:
+            self._score = jax.jit(
+                lambda p, toks: predict_losses(p, rc, {"tokens": toks},
+                                               use_kernel=False))
         self._expert_fns = {}
         for e in library.experts:
             self._expert_fns[e.name] = jax.jit(
                 functools.partial(self._expert_forward, cfg=e.cfg))
 
     @staticmethod
-    def _expert_forward(params, toks, *, cfg):
+    def _expert_forward(params, toks, targets, mask, *, cfg):
+        """Per-example predictions, masked NLL and masked accuracy.
+
+        Padded rows carry an all-zero mask, so their loss/accuracy reduce
+        to 0 under the max(denominator, 1) guard and are dropped host-side.
+        """
         logits, _, _ = forward(params, cfg, {"tokens": toks}, mode="train",
                                remat=False)
-        return jnp.argmax(logits.astype(jnp.float32), axis=-1)
+        logits = logits.astype(jnp.float32)
+        preds = jnp.argmax(logits, axis=-1)
+        # masked token NLL, one-hot contraction (see models.model.cross_entropy)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+        gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        m = mask.astype(jnp.float32)
+        denom = jnp.maximum(m.sum(-1), 1.0)
+        ex_loss = ((logz - gold) * m).sum(-1) / denom
+        ex_acc = ((preds == targets) * m).sum(-1) / denom
+        return preds, ex_loss, ex_acc
 
     # ------------------------------------------------------------- api
 
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _route_batch(self, reqs: list[Request]) -> np.ndarray:
+    def _bucket(self, n: int) -> int:
+        return bucket_size(n) if self.buckets else n
+
+    def _route_batch(self, reqs: list[Request]) -> tuple[np.ndarray,
+                                                         np.ndarray]:
+        """Route one batch of requests.
+
+        Returns ``(pred_losses, choice)``: the router's predicted
+        per-expert losses (B, M) f32 and the selected expert index (B,)
+        int under each request's lambda-weighted constraints.
+        """
+        B = len(reqs)
         toks = np.stack([r.tokens for r in reqs])
         t0 = time.time()
-        pred = np.asarray(self._score(self.router_params, jnp.asarray(toks)))
+        if self.use_kernel:
+            # fused path: constraint add + argmin happen on-device inside
+            # router_score_fused; pad to a bucket so the jit'd decision
+            # function compiles once per bucket, not per ragged tail.
+            lam = lambda_matrix(reqs, self._cnames)
+            Bp = self._bucket(B)
+            if Bp != B:
+                toks = np.concatenate(
+                    [toks, np.zeros((Bp - B,) + toks.shape[1:], toks.dtype)])
+                lam = np.concatenate(
+                    [lam, np.zeros((Bp - B, lam.shape[1]), lam.dtype)])
+            pred, choice = self._decide(self.router_params,
+                                        jnp.asarray(toks), jnp.asarray(lam))
+            pred = np.asarray(pred)[:B]
+            choice = np.asarray(choice)[:B]
+        else:
+            pred = np.asarray(
+                self._score(self.router_params, jnp.asarray(toks)))
+            # score = L-hat + sum_j lambda_j C_j, argmin on the host
+            scores = pred.copy()
+            for c in self.constraints:
+                lam = np.array([r.lambdas.get(c.name, 0.0) for r in reqs])
+                scores = scores + lam[:, None] * c.values[None, :]
+            choice = scores.argmin(axis=1)
         self.stats.router_time_s += time.time() - t0
-        # per-request lambdas: score = L-hat + sum_j lambda_j C_j
-        scores = pred.copy()
-        for c in self.constraints:
-            lam = np.array([r.lambdas.get(c.name, 0.0) for r in reqs])
-            scores = scores + lam[:, None] * c.values[None, :]
-        return pred, scores.argmin(axis=1)
+        return pred, choice
+
+    def _run_expert(self, e, reqs: list[Request]):
+        """Execute one padded per-expert micro-batch; returns per-example
+        (preds, loss, acc) arrays trimmed back to len(reqs)."""
+        n = len(reqs)
+        Bp = self._bucket(n)
+        S = len(reqs[0].tokens)
+        toks = np.zeros((Bp, S), reqs[0].tokens.dtype)
+        targets = np.zeros((Bp, S), np.int32)
+        mask = np.zeros((Bp, S), np.int32)
+        for j, r in enumerate(reqs):
+            toks[j] = r.tokens
+            if r.targets is not None:
+                targets[j] = r.targets
+            if r.mask is not None:
+                mask[j] = r.mask
+        preds, ex_loss, ex_acc = self._expert_fns[e.name](
+            e.params, jnp.asarray(toks), jnp.asarray(targets),
+            jnp.asarray(mask))
+        self.stats.bucket_hits[Bp] += 1
+        self.stats.padded_rows += Bp - n
+        return (np.asarray(preds)[:n], np.asarray(ex_loss)[:n],
+                np.asarray(ex_acc)[:n])
 
     def run(self) -> list[Result]:
         """Drain the queue; returns one Result per request."""
@@ -102,19 +215,18 @@ class TryageEngine:
                 by_expert[int(c)].append(i)
             for mi, idxs in sorted(by_expert.items()):
                 e = self.library[mi]
-                toks = np.stack([batch[i].tokens for i in idxs])
                 t0 = time.time()
-                preds = np.asarray(
-                    self._expert_fns[e.name](e.params, jnp.asarray(toks)))
+                preds, ex_loss, ex_acc = self._run_expert(
+                    e, [batch[i] for i in idxs])
                 dt = time.time() - t0
                 self.stats.expert_time_s += dt
                 for j, i in enumerate(idxs):
                     r = batch[i]
                     loss = acc = None
-                    if r.targets is not None and r.mask is not None:
-                        m = r.mask.astype(bool)
-                        if m.any():
-                            acc = float((preds[j][m] == r.targets[m]).mean())
+                    if (r.targets is not None and r.mask is not None
+                            and r.mask.astype(bool).any()):
+                        loss = float(ex_loss[j])
+                        acc = float(ex_acc[j])
                     flops = 2.0 * e.n_params * len(r.tokens)
                     results.append(Result(
                         uid=r.uid, expert=e.name, pred_losses=pred[i],

@@ -37,6 +37,22 @@ def parse_flags(text: str) -> dict:
     return lambdas
 
 
+def lambda_matrix(requests: "list[Request]",
+                  constraint_names: list) -> np.ndarray:
+    """Per-request constraint weights as the (B, n_c) matrix consumed by
+    the fused router kernel; column order follows ``constraint_names``.
+    With no constraints, returns (B, 1) zeros to pair with the zero-row
+    matrix from ``objective.constraint_matrix``.
+    """
+    if not constraint_names:
+        return np.zeros((len(requests), 1), np.float32)
+    lam = np.zeros((len(requests), len(constraint_names)), np.float32)
+    for i, r in enumerate(requests):
+        for j, name in enumerate(constraint_names):
+            lam[i, j] = r.lambdas.get(name, 0.0)
+    return lam
+
+
 @dataclasses.dataclass
 class Request:
     uid: int

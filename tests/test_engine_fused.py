@@ -1,0 +1,141 @@
+"""Fused-kernel serving path + shape-bucketed expert execution.
+
+Deliberately hypothesis-free so these invariants run even when the
+optional property-testing dep is absent (test_serving.py skips then).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.library import ExpertSpec, ModelLibrary, _enc
+from repro.core.objective import recency_constraint, size_constraint
+from repro.core.router import RouterConfig, init_router
+from repro.data.batching import mlm_batch
+from repro.serving import Request, TryageEngine, bucket_size
+
+
+def _library():
+    lib = ModelLibrary([
+        ExpertSpec("small", _enc("small", 1, 32, 2, 64, 64), {}, 0.5),
+        ExpertSpec("mid", _enc("mid", 1, 48, 2, 96, 64), {}, 0.5),
+        ExpertSpec("big", _enc("big", 2, 64, 2, 128, 64), {}, 0.9),
+    ])
+    from repro.models.model import count_params, init_model
+    for i, e in enumerate(lib.experts):
+        e.params, _ = init_model(jax.random.PRNGKey(i), e.cfg)
+        e.n_params = count_params(e.params)
+    return lib
+
+
+@pytest.fixture(scope="module")
+def engines():
+    """(reference, fused) engines over the same library/router weights."""
+    lib = _library()
+    rc = RouterConfig(n_models=3, vocab_size=64, num_layers=1, d_model=32,
+                      num_heads=2, d_ff=64)
+    rp, _ = init_router(jax.random.PRNGKey(9), rc)
+    cons = [size_constraint(lib), recency_constraint(lib)]
+    return (TryageEngine(lib, rp, rc, cons, max_batch=8, use_kernel=False),
+            TryageEngine(lib, rp, rc, cons, max_batch=8, use_kernel=True))
+
+
+def _requests(n, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(4, 64, size=(n, 32)).astype(np.int32)
+    mb = mlm_batch(toks, rng, 0.2, 64)
+    mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
+    return [Request(uid=i, tokens=mb["tokens"][i], targets=mb["targets"][i],
+                    mask=mb["mask"][i], lambdas=mix[i % len(mix)])
+            for i in range(n)]
+
+
+def test_bucket_size():
+    assert [bucket_size(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+
+
+def test_route_batch_return_contract(engines):
+    ref, fused = engines
+    reqs = _requests(5, seed=0)
+    for eng in (ref, fused):
+        pred, choice = eng._route_batch(reqs)
+        assert pred.shape == (5, 3) and pred.dtype == np.float32
+        assert choice.shape == (5,)
+        assert all(0 <= int(c) < 3 for c in choice)
+
+
+def test_fused_matches_reference_choices(engines):
+    """Mixed-flag workload with a ragged tail (21 % 8 != 0): the fused
+    on-device decision must pick the same experts as the host path."""
+    ref, fused = engines
+    for r in _requests(21, seed=1):
+        ref.submit(r)
+    for r in _requests(21, seed=1):
+        fused.submit(r)
+    res_ref = sorted(ref.run(), key=lambda r: r.uid)
+    res_fused = sorted(fused.run(), key=lambda r: r.uid)
+    assert [r.expert for r in res_ref] == [r.expert for r in res_fused]
+    for a, b in zip(res_ref, res_fused):
+        np.testing.assert_allclose(a.pred_losses, b.pred_losses, atol=1e-5)
+
+
+def test_loss_computed_when_targets_supplied(engines):
+    _, fused = engines
+    for r in _requests(9, seed=2):
+        fused.submit(r)
+    out = fused.run()
+    assert len(out) == 9
+    for r in out:
+        assert r.loss is not None and np.isfinite(r.loss) and r.loss >= 0
+        assert r.accuracy is not None and 0.0 <= r.accuracy <= 1.0
+
+
+def test_loss_matches_direct_cross_entropy(engines):
+    """Engine-reported loss == models.model.cross_entropy on the same
+    request through the same expert."""
+    import jax.numpy as jnp
+    from repro.models.model import cross_entropy, forward
+    _, fused = engines
+    (req,) = _requests(1, seed=5)
+    fused.submit(req)
+    (res,) = fused.run()
+    e = next(e for e in fused.library.experts if e.name == res.expert)
+    logits, _, _ = forward(e.params, e.cfg, {"tokens": jnp.asarray(req.tokens[None])},
+                           mode="train", remat=False)
+    ce = cross_entropy(logits, jnp.asarray(req.targets[None]),
+                       jnp.asarray(req.mask[None]))
+    np.testing.assert_allclose(res.loss, float(ce), rtol=1e-5)
+
+
+def test_loss_none_without_targets(engines):
+    _, fused = engines
+    fused.submit(Request(uid=0, tokens=np.ones(32, np.int32)))
+    (r,) = fused.run()
+    assert r.loss is None and r.accuracy is None
+
+
+def test_bucket_stats_accounting(engines):
+    _, fused = engines
+    fused.stats.bucket_hits.clear()
+    fused.stats.padded_rows = 0
+    for r in _requests(11, seed=3):
+        fused.submit(r)
+    out = fused.run()
+    assert len(out) == 11
+    hits = fused.stats.bucket_hits
+    assert hits, "bucketed execution must record launches"
+    assert all(k & (k - 1) == 0 for k in hits)          # power-of-two shapes
+    assert sum(k * v for k, v in hits.items()) == 11 + fused.stats.padded_rows
+
+
+def test_buckets_disabled_runs_exact_shapes(engines):
+    lib = engines[1].library
+    rc = engines[1].rc
+    eng = TryageEngine(lib, engines[1].router_params, rc,
+                       engines[1].constraints, max_batch=8, use_kernel=True,
+                       buckets=False)
+    for r in _requests(5, seed=4):
+        eng.submit(r)
+    out = eng.run()
+    assert len(out) == 5
+    assert eng.stats.padded_rows == 0

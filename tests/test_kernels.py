@@ -78,6 +78,68 @@ def test_router_score_vs_ref(B, d, hid, M, nc, block_b):
     assert bool((c1 == c2).all())
 
 
+def test_router_route_matches_objective_route():
+    """Parity: the fused decision (interpret mode) must match
+    ``objective.routing_scores`` + ``route`` in f32 for random per-request
+    lambdas, including the padded tail (B % block_b != 0).  Scores agree to
+    1 ulp (batch tiling changes XLA CPU vectorization, so strict bitwise
+    equality over different tile shapes is not attainable); the selected
+    expert must agree exactly on every request."""
+    from repro.core.objective import Constraint, route, routing_scores
+    from repro.kernels.router_score.ops import router_route
+
+    B, d, hid, M, nc, block_b = 37, 64, 32, 7, 2, 16   # 37 % 16 != 0
+    ks = jax.random.split(jax.random.PRNGKey(7), 7)
+    emb = jax.random.normal(ks[0], (B, d))
+    head = {"w1": jax.random.normal(ks[1], (d, hid)) * 0.1,
+            "b1": jax.random.normal(ks[2], (hid,)) * 0.1,
+            "w2": jax.random.normal(ks[3], (hid, M)) * 0.1,
+            "b2": jax.random.normal(ks[4], (M,)) * 0.1}
+    cv = np.asarray(jax.random.uniform(ks[5], (nc, M)), np.float32)
+    lam = np.asarray(jax.random.uniform(ks[6], (B, nc)) * 2, np.float32)
+
+    pred, choice = router_route(emb, head, cv, lam, block_b=block_b,
+                                interpret=True)
+    pred, choice = np.asarray(pred), np.asarray(choice)
+    assert pred.dtype == np.float32 and pred.shape == (B, M)
+
+    # same head math in f32, to within a single ulp
+    pred_ref, choice_ref = router_score_ref(
+        emb, head["w1"], head["b1"], head["w2"], head["b2"],
+        jnp.asarray(cv), jnp.asarray(lam))
+    np.testing.assert_allclose(pred, np.asarray(pred_ref), rtol=2.4e-7,
+                               atol=1.2e-7)
+    np.testing.assert_array_equal(choice, np.asarray(choice_ref))
+
+    # decision parity against the reference objective, request by request
+    cons = [Constraint(f"c{j}", cv[j]) for j in range(nc)]
+    for i in range(B):
+        s = np.asarray(routing_scores(pred[i], cons, [float(v) for v in lam[i]]))
+        assert s.dtype == np.float32
+        assert int(choice[i]) == int(route(pred[i], cons,
+                                           [float(v) for v in lam[i]]))
+
+
+def test_router_route_no_constraints_is_pure_argmin():
+    """n_c=0 surface: a zero constraint row + zero lambda column leaves the
+    decision at argmin of the predicted losses."""
+    from repro.core.objective import constraint_matrix
+    from repro.kernels.router_score.ops import router_route
+
+    B, d, hid, M = 5, 16, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    emb = jax.random.normal(ks[0], (B, d))
+    head = {"w1": jax.random.normal(ks[1], (d, hid)) * 0.1,
+            "b1": jax.random.normal(ks[2], (hid,)) * 0.1,
+            "w2": jax.random.normal(ks[3], (hid, M)) * 0.1,
+            "b2": jax.random.normal(ks[4], (M,)) * 0.1}
+    cv = constraint_matrix([], M)
+    lam = np.zeros((B, 1), np.float32)
+    pred, choice = router_route(emb, head, cv, lam, interpret=True)
+    np.testing.assert_array_equal(np.asarray(choice),
+                                  np.asarray(pred).argmin(axis=1))
+
+
 # ------------------------------------------------------- mlstm chunkwise
 
 @pytest.mark.parametrize("B,S,H,dh,chunk", [

@@ -4,6 +4,8 @@ the system's core math (eq. 1/4)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.library import ExpertSpec, ModelLibrary, _enc
