@@ -15,11 +15,16 @@ experiment is run automatically.
   kernels   Pallas kernel microbenches (us/call, interpret mode)
   router_decision  router-decision throughput, fused kernel vs host path
   serving   engine throughput on batched requests
+  scheduler continuous-batching vs FIFO-drain throughput + padded rows
+
+Select a subset with ``--only kernels,scheduler``; ``--out bench.csv``
+additionally writes the CSV to a file (CI uploads it as an artifact);
+``--fast`` shrinks the fallback experiment when no artifacts are cached.
 """
 
 from __future__ import annotations
 
-import json
+import argparse
 import os
 import sys
 import time
@@ -29,15 +34,20 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 
-def _results():
+def _results(fast: bool = False):
     from repro.core import experiment as ex
     try:
         return ex.load_results()
     except FileNotFoundError:
         print("# no cached artifacts; running reduced experiment", flush=True)
-        xc = ex.ExperimentConfig(expert_steps=120, n_train_prompts=1024,
-                                 n_val_prompts=192, n_test_per_domain=48,
-                                 router_epochs=5)
+        if fast:
+            xc = ex.ExperimentConfig(expert_steps=60, n_train_prompts=512,
+                                     n_val_prompts=128, n_test_per_domain=24,
+                                     router_epochs=3)
+        else:
+            xc = ex.ExperimentConfig(expert_steps=120, n_train_prompts=1024,
+                                     n_val_prompts=192, n_test_per_domain=48,
+                                     router_epochs=5)
         return ex.run_experiment(xc, verbose=False)
 
 
@@ -194,7 +204,7 @@ def bench_router_decision(res):
     rows, choices = [], {}
     for name, use_kernel in [("host", False), ("fused", True)]:
         eng = TryageEngine(lib, rp, rc, cons, max_batch=32,
-                           use_kernel=use_kernel)
+                           use_kernel=use_kernel, decision_cache=False)
         eng._route_batch(batches[0])  # compile
         t0 = time.time()
         ch = []
@@ -241,21 +251,153 @@ def bench_serving(res):
     ]
 
 
-BENCHES = [bench_fig2, bench_fig3a, bench_fig3a_mixed, bench_fig3b, bench_fig3cd, bench_fig4,
-           bench_fig5, bench_router_eps, bench_kernels,
-           bench_router_decision, bench_serving]
+def bench_scheduler(res):
+    """Continuous-batching scheduler vs FIFO drain on the mixed-flag
+    workload from launch/serve.py (25% repeated prompts so the decision
+    cache sees production-shaped traffic).  Continuous batching must
+    strictly reduce padded rows and match or beat FIFO throughput, and
+    repeated requests must get the identical expert choice (cache
+    parity)."""
+    from repro.core import experiment as ex
+    from repro.core.objective import recency_constraint, size_constraint
+    from repro.data.batching import mlm_batch
+    from repro.serving import Request, TryageEngine
+    art = ex.load_artifacts()
+    lib, rp, rc, corpus = (art["library"], art["router_params"], art["rc"],
+                           art["corpus"])
+    cons = [size_constraint(lib), recency_constraint(lib)]
+
+    n, n_unique = 256, 192
+    rng = np.random.default_rng(0)
+    uniform = {d: 1.0 / 8 for d in corpus.tables}
+    toks, _ = corpus.sample_mixture(uniform, n_unique, 128, rng)
+    mb = mlm_batch(toks, rng, 0.15, corpus.vocab_size)
+    flag_mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
+
+    def workload():
+        # last n - n_unique requests repeat earlier prompts + lambdas
+        return [Request(uid=i, tokens=mb["tokens"][i % n_unique],
+                        targets=mb["targets"][i % n_unique],
+                        mask=mb["mask"][i % n_unique],
+                        lambdas=flag_mix[i % len(flag_mix)])
+                for i in range(n)]
+
+    def engine():
+        return TryageEngine(lib, rp, rc, cons, max_batch=32,
+                            max_wait_s=10.0)
+
+    def reset(eng):
+        # fresh stats and a cold decision cache so the timed pass sees
+        # exactly the 64/256 repeated prompts, not the warmup's entries
+        eng.stats = type(eng.stats)()
+        eng.cache = type(eng.cache)(eng.cache.capacity)
+
+    # FIFO drain ---------------------------------------------------------
+    fifo = engine()
+    for r in workload():                       # warm the jit caches
+        fifo.submit(r)
+    fifo.run()
+    reset(fifo)
+    for r in workload():
+        fifo.submit(r)
+    t0 = time.time()
+    res_fifo = fifo.run()
+    dt_fifo = time.time() - t0
+
+    # continuous batching ------------------------------------------------
+    cb = engine()
+    list(cb.serve(iter(workload())))           # warm the jit caches
+    reset(cb)
+    t0 = time.time()
+    res_cb = list(cb.serve(iter(workload())))
+    dt_cb = time.time() - t0
+
+    by_uid = {r.uid: r.expert for r in res_cb}
+    parity = float(all(by_uid[i] == by_uid[i % n_unique] for i in range(n)))
+    match = float(all(by_uid[r.uid] == r.expert for r in res_fifo))
+    lat = cb.stats.latency_percentiles()
+    return [
+        ("scheduler/fifo_req_per_s", n / dt_fifo, "256 reqs warm, batch 32"),
+        ("scheduler/stream_req_per_s", n / dt_cb, "continuous batching"),
+        ("scheduler/fifo_padded_rows", float(fifo.stats.padded_rows), ""),
+        ("scheduler/stream_padded_rows", float(cb.stats.padded_rows),
+         "must be < fifo"),
+        ("scheduler/padded_rows_saved",
+         float(fifo.stats.padded_rows - cb.stats.padded_rows),
+         "must be > 0"),
+        ("scheduler/cache_hit_rate", cb.stats.cache_hit_rate,
+         "64/256 repeated prompts"),
+        ("scheduler/cache_parity", parity, "repeats choose same expert"),
+        ("scheduler/discipline_choice_match", match, "fifo vs stream"),
+        ("scheduler/stream_p50_latency_s", lat["p50_s"], ""),
+        ("scheduler/stream_p95_latency_s", lat["p95_s"], ""),
+    ]
 
 
-def main() -> None:
-    res = _results()
-    print("name,value,derived")
-    for bench in BENCHES:
+# (name, fn, needs_experiment_artifacts)
+BENCHES = [
+    ("fig2", bench_fig2, True),
+    ("fig3a", bench_fig3a, True),
+    ("fig3a_mixed", bench_fig3a_mixed, True),
+    ("fig3b", bench_fig3b, True),
+    ("fig3cd", bench_fig3cd, True),
+    ("fig4", bench_fig4, True),
+    ("fig5", bench_fig5, True),
+    ("router_eps", bench_router_eps, True),
+    ("kernels", bench_kernels, False),
+    ("router_decision", bench_router_decision, False),
+    ("serving", bench_serving, True),
+    ("scheduler", bench_scheduler, True),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default="",
+                    help="comma-separated benchmark names "
+                         "(default: run all)")
+    ap.add_argument("--out", type=str, default="",
+                    help="also write the CSV rows to this file")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller fallback experiment when artifacts are "
+                         "missing")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero if any selected benchmark errors "
+                         "(CI smoke mode)")
+    args = ap.parse_args(argv)
+
+    selected = [x.strip() for x in args.only.split(",") if x.strip()]
+    unknown = set(selected) - {name for name, _, _ in BENCHES}
+    if unknown:
+        raise SystemExit(f"unknown benchmarks: {sorted(unknown)}")
+    benches = [(n, f, needs) for n, f, needs in BENCHES
+               if not selected or n in selected]
+
+    res = None
+    if any(needs for _, _, needs in benches):
+        res = _results(fast=args.fast)
+
+    lines = ["name,value,derived"]
+
+    def emit(line):
+        lines.append(line)
+        print(line)
+        sys.stdout.flush()
+
+    print(lines[0])
+    errors = 0
+    for bname, bench, _ in benches:
         try:
             for name, value, derived in bench(res):
-                print(f"{name},{value:.6g},{derived}")
+                emit(f"{name},{value:.6g},{derived}")
         except Exception as e:  # noqa: BLE001
-            print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}")
-        sys.stdout.flush()
+            errors += 1
+            emit(f"{bname},ERROR,{type(e).__name__}: {e}")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("\n".join(lines) + "\n")
+    if args.strict and errors:
+        raise SystemExit(f"{errors} benchmark(s) errored")
 
 
 if __name__ == '__main__':

@@ -39,5 +39,5 @@ base = front["rows"][0]
 ok = [r for r in front["rows"] if r["accuracy"] >= base["accuracy"] - 0.05]
 best = min(ok, key=lambda r: r["mean_size"])
 print(f"\nheadline: {1 - best['mean_size']/base['mean_size']:.0%} compute "
-      f"saved within 5% accuracy of the unconstrained router "
+      "saved within 5% accuracy of the unconstrained router "
       f"(lambda={best['lam']:.2f})")

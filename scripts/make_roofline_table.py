@@ -5,7 +5,6 @@ experiments/dryrun/*.json.  Usage:
 """
 
 import argparse
-import glob
 import json
 import os
 

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, list_archs
-from repro.models import (decode_step, init_decode_state, init_model,
+from repro.models import (decode_step, init_model,
                           lm_loss, prefill, count_params)
 
 archs = sys.argv[1:] or list_archs()

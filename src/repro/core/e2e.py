@@ -11,7 +11,6 @@ distribution the router sends them.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

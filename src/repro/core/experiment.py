@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core import baselines as bl
 from repro.core.library import ModelLibrary, paper_library_specs
-from repro.core.objective import size_constraint, recency_constraint
+from repro.core.objective import size_constraint
 from repro.core.pareto import pareto_sweep
 from repro.core.qtable import build_q_table, mlm_accuracy
 from repro.core.router import RouterConfig, init_router, predict_losses, router_embed

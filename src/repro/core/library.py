@@ -17,7 +17,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import jax
 import numpy as np
 
 from repro.data.corpus import DOMAINS

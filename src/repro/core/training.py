@@ -10,15 +10,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.library import ExpertSpec, ModelLibrary
-from repro.core.router import RouterConfig, init_router, predict_losses
-from repro.data.batching import BatchIterator, mlm_batch
+from repro.core.router import RouterConfig, predict_losses
+from repro.data.batching import BatchIterator
 from repro.data.corpus import DomainCorpus
 from repro.models.model import count_params, init_model, lm_loss
 from repro.optim import adamw_init, adamw_update, exp_decay_schedule

@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.kernels.mlstm_scan.kernel import mlstm_chunkwise_bh
 

@@ -46,7 +46,6 @@ def _shape_bytes(shape_text: str) -> int:
 def collective_stats(hlo_text: str) -> dict:
     """Per-collective-kind output bytes + op counts (per device)."""
     out = {k: {"bytes": 0, "count": 0} for k in COLLECTIVES}
-    seen_done = set()
     for m in _INSTR_RE.finditer(hlo_text):
         shape_text, kind = m.group(1), m.group(2)
         line = hlo_text[m.start():hlo_text.find("\n", m.start())]

@@ -1,8 +1,18 @@
 """Serving driver: bring up a TryageEngine over the trained library and
-push batched requests through it (the paper's kind of end-to-end driver).
+drive the streaming API with a Poisson arrival simulator.
 
   PYTHONPATH=src python -m repro.launch.serve --requests 256 [--fast] \
-      [--use-kernel] [--no-buckets]
+      [--use-kernel] [--no-buckets] [--fifo] [--arrival-rate 200] \
+      [--max-wait-s 0.05] [--priority-mix 0.9,0.08,0.02]
+
+By default requests flow through ``TryageEngine.serve`` — the
+continuous-batching scheduler that coalesces same-expert requests
+across admission batches into full power-of-two buckets and flushes a
+lane early when its oldest request has waited ``--max-wait-s``.
+``--fifo`` switches back to the per-batch FIFO drain (``run()``) for
+comparison.  ``--arrival-rate`` is the Poisson arrival intensity in
+requests/second (0 = all requests arrive at once); ``--priority-mix``
+gives the fraction of requests at priority 0, 1, 2, ...
 
 --use-kernel routes every decision through the fused Pallas head
 (compiled on TPU/GPU, interpret on CPU); --no-buckets disables the
@@ -19,6 +29,36 @@ import time
 import numpy as np
 
 
+def poisson_arrivals(reqs, rate: float, rng,
+                     now_fn=time.monotonic, sleep_fn=time.sleep):
+    """Yield ``reqs`` with exponential inter-arrival gaps at ``rate``
+    req/s, emitting ``None`` idle ticks while waiting so the engine's
+    scheduler can fire deadline flushes between arrivals.  ``rate <= 0``
+    yields everything back-to-back (a closed-loop benchmark)."""
+    if rate <= 0:
+        yield from reqs
+        return
+    t_next = now_fn()
+    for r in reqs:
+        t_next += rng.exponential(1.0 / rate)
+        while now_fn() < t_next:
+            yield None
+            remaining = t_next - now_fn()
+            if remaining > 0:
+                sleep_fn(min(remaining, 1e-3))
+        r.arrival = now_fn()
+        yield r
+
+
+def parse_priority_mix(spec: str) -> list[float]:
+    """'0.9,0.08,0.02' -> normalized fractions for priorities 0,1,2."""
+    fracs = [float(x) for x in spec.split(",") if x.strip()]
+    total = sum(fracs)
+    if not fracs or total <= 0:
+        return [1.0]
+    return [f / total for f in fracs]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=256)
@@ -29,6 +69,20 @@ def main():
                     help="fused Pallas router decision path")
     ap.add_argument("--no-buckets", action="store_true",
                     help="disable power-of-two expert micro-batch padding")
+    ap.add_argument("--fifo", action="store_true",
+                    help="FIFO drain instead of the continuous-batching "
+                         "scheduler")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrival intensity, req/s (0 = all at once)")
+    ap.add_argument("--max-wait-s", type=float, default=0.05,
+                    help="lane deadline before a partial bucket flushes")
+    ap.add_argument("--lane-target", type=int, default=None,
+                    help="lane occupancy that flushes a full bucket "
+                         "(default: bucket_size(max_batch))")
+    ap.add_argument("--priority-mix", type=str, default="0.9,0.08,0.02",
+                    help="comma fractions of requests at priority 0,1,2,...")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the router-decision cache")
     args = ap.parse_args()
 
     from repro.core import experiment as ex
@@ -52,25 +106,39 @@ def main():
                        [size_constraint(lib), recency_constraint(lib)],
                        max_batch=args.max_batch,
                        use_kernel=args.use_kernel,
-                       buckets=not args.no_buckets)
+                       buckets=not args.no_buckets,
+                       lane_target=args.lane_target,
+                       max_wait_s=args.max_wait_s,
+                       decision_cache=not args.no_cache)
 
     rng = np.random.default_rng(0)
     uniform = {d: 1.0 / 8 for d in corpus.tables}
     toks, doms = corpus.sample_mixture(uniform, args.requests, args.seq, rng)
     mb = mlm_batch(toks, rng, 0.15, corpus.vocab_size)
     flag_mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
-    for i in range(args.requests):
-        eng.submit(Request(uid=i, tokens=mb["tokens"][i],
-                           targets=mb["targets"][i], mask=mb["mask"][i],
-                           lambdas=flag_mix[i % len(flag_mix)]))
-    t0 = time.time()
-    results = eng.run()
-    dt = time.time() - t0
+    mix = parse_priority_mix(args.priority_mix)
+    priorities = rng.choice(len(mix), size=args.requests, p=mix)
+    reqs = [Request(uid=i, tokens=mb["tokens"][i], targets=mb["targets"][i],
+                    mask=mb["mask"][i], lambdas=flag_mix[i % len(flag_mix)],
+                    priority=int(priorities[i]))
+            for i in range(args.requests)]
+
+    t0 = time.monotonic()
+    if args.fifo:
+        for r in reqs:
+            eng.submit(r)
+        results = eng.run()
+    else:
+        arrivals = poisson_arrivals(reqs, args.arrival_rate, rng)
+        results = list(eng.serve(arrivals))
+    dt = time.monotonic() - t0
     accs = [r.accuracy for r in results if r.accuracy is not None]
     losses = [r.loss for r in results if r.loss is not None]
     print(json.dumps({
         "requests": len(results),
         "router_path": "fused-kernel" if args.use_kernel else "host",
+        "discipline": "fifo-drain" if args.fifo else "continuous-batching",
+        "arrival_rate": args.arrival_rate,
         "wall_s": round(dt, 2),
         "req_per_s": round(len(results) / dt, 1),
         "mean_mlm_accuracy": round(float(np.mean(accs)), 4),

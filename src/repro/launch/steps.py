@@ -9,8 +9,7 @@ the real CPU-scale training/serving paths (with concrete arrays).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +18,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch import specs as specs_lib
 from repro.models import model as model_lib
 from repro.models.common import InputShape, ModelConfig
-from repro.optim import adamw_init, adamw_update
+from repro.optim import adamw_update
 from repro.sharding import (DEFAULT_RULES, MULTIPOD_RULES, LogicalRules,
                             activation_sharding, tree_logical_to_spec)
 
@@ -109,7 +108,6 @@ def build_train_step(cfg: ModelConfig, shape: InputShape, mesh,
                 acc_body, (zeros, jnp.zeros((), jnp.float32)), mb)
             grads = jax.tree.map(lambda g: g / n_micro, grads)
             loss = loss / n_micro
-            metrics = {}
         new_params, new_opt = adamw_update(params, grads, _OptShim(opt),
                                            lr=lr, weight_decay=1e-5)
         return new_params, _opt_as_dict(new_opt), loss

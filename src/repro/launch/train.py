@@ -17,7 +17,6 @@ Example:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import numpy as np
@@ -28,7 +27,7 @@ def train_arch(arch: str, steps: int, batch: int, seq: int, verbose=True):
     import jax.numpy as jnp
 
     from repro.configs import get_config
-    from repro.data.batching import clm_batch, mlm_batch
+    from repro.data.batching import mlm_batch
     from repro.data.corpus import DomainCorpus
     from repro.launch.mesh import make_host_mesh
     from repro.launch.steps import PerfKnobs, build_train_step

@@ -14,7 +14,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import AttnConfig, ModelConfig
+from repro.models.common import ModelConfig
 from repro.models.layers import _init, apply_rope, apply_mrope
 from repro.sharding.context import shard_act
 

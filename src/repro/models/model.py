@@ -9,7 +9,6 @@ an 80-layer 72B model lowers as fast as a 2-layer one.
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

@@ -1,6 +1,9 @@
+from repro.serving.cache import DecisionCache
 from repro.serving.engine import TryageEngine, EngineStats, bucket_size
 from repro.serving.requests import (Request, Result, lambda_matrix,
                                     parse_flags)
+from repro.serving.scheduler import ExpertScheduler, Lane, LaneEntry
 
 __all__ = ["TryageEngine", "EngineStats", "Request", "Result",
-           "bucket_size", "lambda_matrix", "parse_flags"]
+           "bucket_size", "lambda_matrix", "parse_flags", "DecisionCache",
+           "ExpertScheduler", "Lane", "LaneEntry"]

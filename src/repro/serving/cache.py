@@ -1,0 +1,54 @@
+"""Router-decision cache.
+
+Scoring is cheap per request but it is pure overhead when the same
+prompt arrives again with the same constraint weights — a common shape
+of production traffic (retries, template prompts, polling agents).  The
+cache keys on the exact token bytes plus the request's lambda vector
+(in engine constraint order), so a hit is guaranteed to return the
+identical ``(pred_losses, choice)`` the fresh score produced: no hash
+collisions, no approximate matching.
+
+Capacity-bounded LRU: reads refresh recency, inserts evict the least
+recently used entry.  Hit/miss telemetry lives in ``EngineStats``, not
+here — the engine is the only consumer.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+
+class DecisionCache:
+    """LRU cache from (token bytes, lambda vector) to router decisions."""
+
+    def __init__(self, capacity: int = 4096):
+        assert capacity >= 1
+        self.capacity = capacity
+        self._entries: OrderedDict[tuple, tuple[np.ndarray, int]] = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @staticmethod
+    def key(tokens: np.ndarray, lambdas: dict, constraint_names: list) -> tuple:
+        """Exact cache key: token buffer bytes (plus dtype/shape, so
+        equal byte strings from different layouts cannot collide) + the
+        lambda vector laid out in engine constraint order (unknown
+        constraint names are ignored, matching ``lambda_matrix``)."""
+        lam = tuple(float(lambdas.get(name, 0.0)) for name in constraint_names)
+        return (tokens.tobytes(), tokens.dtype.str, tokens.shape, lam)
+
+    def get(self, key: tuple) -> tuple[np.ndarray, int] | None:
+        entry = self._entries.get(key)
+        if entry is None:
+            return None
+        self._entries.move_to_end(key)
+        return entry
+
+    def put(self, key: tuple, pred: np.ndarray, choice: int) -> None:
+        self._entries[key] = (np.array(pred, np.float32), int(choice))
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)

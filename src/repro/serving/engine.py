@@ -1,14 +1,29 @@
-"""The Tryage serving engine: batched router scoring -> constrained routing
--> per-expert micro-batched execution.
+"""The Tryage serving engine: a two-stage pipeline of batched router
+scoring (the *routing stage*) and per-expert micro-batched execution
+(the *expert executor*).
 
-This is the production form of the paper's dispatch loop: requests queue
-up, the perceptive router scores a whole batch in one forward pass, the
-routing objective (with per-request lambda weights from user flags) picks
-an expert per prompt, prompts are grouped into per-expert micro-batches and
-executed, and results stream back with measured loss/accuracy plus a FLOPs
-proxy for the cost/performance telemetry that the Pareto analysis consumes.
+This is the production form of the paper's dispatch loop: requests are
+admitted, the perceptive router scores a whole admission batch in one
+forward pass, the routing objective (with per-request lambda weights
+from user flags) picks an expert per prompt, and prompts land in
+per-expert *lanes* owned by the scheduler.  Two executor disciplines
+exist on top of the same routing stage:
 
-Two decision paths exist:
+  ``run()``    FIFO drain — every admission batch launches its per-expert
+               groups immediately, however ragged.  Kept as the baseline
+               the continuous-batching path is benchmarked against.
+  ``serve()``  continuous batching — lanes accumulate same-expert
+               requests *across* admission batches and flush only on a
+               full power-of-two bucket or a ``max_wait_s`` deadline
+               (see ``repro.serving.scheduler``), streaming ``Result``s
+               back as micro-batches complete.
+
+Routing decisions are memoised in an exact LRU cache keyed on
+``(token bytes, lambda vector)`` (``repro.serving.cache``), so repeated
+prompts skip the router forward pass entirely; a hit returns the
+identical choice the fresh score produced.
+
+Two decision paths exist for the scoring itself:
 
   use_kernel=True   one jit'd decision function per batch: the encoder
                     embedding runs in XLA, then MLP head -> softplus ->
@@ -22,17 +37,19 @@ Two decision paths exist:
 
 Expert micro-batches are padded to power-of-two buckets (``buckets=True``)
 so the jit'd expert functions see a bounded set of shapes instead of
-recompiling for every ragged batch size; bucket occupancy is tracked in
-``EngineStats``.
+recompiling for every ragged batch size; bucket occupancy, flush
+reasons, cache hit rate and per-request latency percentiles are tracked
+in ``EngineStats``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 import time
-from collections import defaultdict
-from typing import Sequence
+from collections import defaultdict, deque
+from typing import Callable, Iterable, Iterator, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +60,9 @@ from repro.core.objective import Constraint, constraint_matrix
 from repro.core.router import RouterConfig, predict_losses, router_embed
 from repro.kernels.router_score import ops as rs_ops
 from repro.models.model import forward
+from repro.serving.cache import DecisionCache
 from repro.serving.requests import Request, Result, lambda_matrix
+from repro.serving.scheduler import ExpertScheduler, LaneEntry
 
 
 def bucket_size(n: int) -> int:
@@ -58,29 +77,79 @@ class EngineStats:
         default_factory=lambda: defaultdict(int))
     total_flops: float = 0.0
     router_time_s: float = 0.0
+    router_batches: int = 0            # router forward passes launched
     expert_time_s: float = 0.0
     # shape-bucketing telemetry: padded micro-batch size -> launch count,
     # plus the total number of padded (wasted) rows executed.
     bucket_hits: dict = dataclasses.field(
         default_factory=lambda: defaultdict(int))
     padded_rows: int = 0
+    # scheduler telemetry: flush reason -> count, peak lane depth per
+    # expert name, and true enqueue->flush latency per request.
+    flushes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    lane_peaks: dict = dataclasses.field(default_factory=dict)
+    # bounded window so a long-running serve() keeps O(1) memory;
+    # percentiles are over the most recent 64k requests
+    latencies: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=65536))
+    # router-decision cache telemetry.
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+    def latency_percentiles(self) -> dict:
+        if not self.latencies:
+            return {"p50_s": 0.0, "p95_s": 0.0}
+        lat = np.asarray(self.latencies)
+        return {"p50_s": float(np.percentile(lat, 50)),
+                "p95_s": float(np.percentile(lat, 95))}
 
     def summary(self) -> dict:
         return {"served": self.served,
                 "per_expert": dict(self.per_expert),
                 "total_flops": self.total_flops,
                 "router_time_s": round(self.router_time_s, 3),
+                "router_batches": self.router_batches,
                 "expert_time_s": round(self.expert_time_s, 3),
                 "bucket_hits": {int(k): v for k, v in
                                 sorted(self.bucket_hits.items())},
-                "padded_rows": self.padded_rows}
+                "padded_rows": self.padded_rows,
+                "flushes": dict(self.flushes),
+                "lane_peaks": dict(self.lane_peaks),
+                "latency": {k: round(v, 6) for k, v in
+                            self.latency_percentiles().items()},
+                "cache": {"hits": self.cache_hits,
+                          "misses": self.cache_misses,
+                          "hit_rate": round(self.cache_hit_rate, 4)}}
 
 
 class TryageEngine:
+    """Two-stage serving pipeline over a model library.
+
+    Scheduler knobs (used by ``serve()``):
+
+    - ``lane_target``: lane occupancy that flushes a full micro-batch;
+      defaults to ``bucket_size(max_batch)`` so a target flush is a full
+      power-of-two bucket with zero padded rows.
+    - ``max_wait_s``: deadline for the oldest request in a lane — a lane
+      holding even a single request flushes once it has waited this long.
+    - ``decision_cache`` / ``cache_capacity``: exact LRU memoisation of
+      routing decisions keyed on (token bytes, lambda vector).
+    - ``now_fn``: engine clock (injectable for deterministic tests).
+    """
+
     def __init__(self, library: ModelLibrary, router_params,
                  rc: RouterConfig, constraints: Sequence[Constraint] = (),
                  max_batch: int = 16, use_kernel: bool = False,
-                 interpret: bool | None = None, buckets: bool = True):
+                 interpret: bool | None = None, buckets: bool = True,
+                 lane_target: int | None = None, max_wait_s: float = 0.05,
+                 decision_cache: bool = True, cache_capacity: int = 4096,
+                 now_fn: Callable[[], float] = time.monotonic):
         assert len(library) == rc.n_models
         self.library = library
         self.router_params = router_params
@@ -89,6 +158,12 @@ class TryageEngine:
         self.max_batch = max_batch
         self.use_kernel = use_kernel
         self.buckets = buckets
+        self.lane_target = (bucket_size(max_batch) if lane_target is None
+                            else lane_target)
+        self.max_wait_s = max_wait_s
+        self.cache = (DecisionCache(cache_capacity) if decision_cache
+                      else None)
+        self._now = now_fn
         self.queue: list[Request] = []
         self.stats = EngineStats()
 
@@ -137,14 +212,18 @@ class TryageEngine:
     # ------------------------------------------------------------- api
 
     def submit(self, req: Request):
+        if req.arrival is None:
+            req.arrival = self._now()
         self.queue.append(req)
 
     def _bucket(self, n: int) -> int:
         return bucket_size(n) if self.buckets else n
 
-    def _route_batch(self, reqs: list[Request]) -> tuple[np.ndarray,
+    # ---------------------------------------------------- routing stage
+
+    def _score_batch(self, reqs: list[Request]) -> tuple[np.ndarray,
                                                          np.ndarray]:
-        """Route one batch of requests.
+        """Score one batch with the router (no cache).
 
         Returns ``(pred_losses, choice)``: the router's predicted
         per-expert losses (B, M) f32 and the selected expert index (B,)
@@ -152,7 +231,7 @@ class TryageEngine:
         """
         B = len(reqs)
         toks = np.stack([r.tokens for r in reqs])
-        t0 = time.time()
+        t0 = self._now()
         if self.use_kernel:
             # fused path: constraint add + argmin happen on-device inside
             # router_score_fused; pad to a bucket so the jit'd decision
@@ -177,8 +256,52 @@ class TryageEngine:
                 lam = np.array([r.lambdas.get(c.name, 0.0) for r in reqs])
                 scores = scores + lam[:, None] * c.values[None, :]
             choice = scores.argmin(axis=1)
-        self.stats.router_time_s += time.time() - t0
+        self.stats.router_time_s += self._now() - t0
+        self.stats.router_batches += 1
         return pred, choice
+
+    def _route_admitted(self, reqs: list[Request]) -> tuple[
+            np.ndarray, np.ndarray, np.ndarray]:
+        """Route a batch through the decision cache: cached requests skip
+        scoring, misses are scored as one (smaller) batch and inserted.
+
+        Returns ``(pred_losses (B, M), choice (B,), cached (B,) bool)``.
+        """
+        B = len(reqs)
+        if self.cache is None:
+            pred, choice = self._score_batch(reqs)
+            return pred, choice, np.zeros(B, bool)
+        pred = np.zeros((B, self.rc.n_models), np.float32)
+        choice = np.zeros(B, np.int64)
+        cached = np.zeros(B, bool)
+        keys = [DecisionCache.key(r.tokens, r.lambdas, self._cnames)
+                for r in reqs]
+        misses = []
+        for i, key in enumerate(keys):
+            hit = self.cache.get(key)
+            if hit is None:
+                misses.append(i)
+            else:
+                pred[i], choice[i] = hit
+                cached[i] = True
+        if misses:
+            mpred, mchoice = self._score_batch([reqs[i] for i in misses])
+            for j, i in enumerate(misses):
+                pred[i] = mpred[j]
+                choice[i] = mchoice[j]
+                self.cache.put(keys[i], mpred[j], mchoice[j])
+        self.stats.cache_hits += B - len(misses)
+        self.stats.cache_misses += len(misses)
+        return pred, choice, cached
+
+    def _route_batch(self, reqs: list[Request]) -> tuple[np.ndarray,
+                                                         np.ndarray]:
+        """Route one batch of requests (cache-aware); see
+        ``_route_admitted`` for the variant that also reports hits."""
+        pred, choice, _ = self._route_admitted(reqs)
+        return pred, choice
+
+    # --------------------------------------------------- expert executor
 
     def _run_expert(self, e, reqs: list[Request]):
         """Execute one padded per-expert micro-batch; returns per-example
@@ -203,36 +326,117 @@ class TryageEngine:
         return (np.asarray(preds)[:n], np.asarray(ex_loss)[:n],
                 np.asarray(ex_acc)[:n])
 
+    def _execute(self, expert_idx: int, entries: list[LaneEntry],
+                 reason: str) -> list[Result]:
+        """Launch one per-expert micro-batch and materialise Results with
+        true enqueue->flush latency."""
+        e = self.library[expert_idx]
+        t0 = self._now()
+        preds, ex_loss, ex_acc = self._run_expert(
+            e, [en.req for en in entries])
+        end = self._now()
+        self.stats.expert_time_s += end - t0
+        self.stats.flushes[reason] += 1
+        out = []
+        for j, en in enumerate(entries):
+            r = en.req
+            loss = acc = None
+            if (r.targets is not None and r.mask is not None
+                    and r.mask.astype(bool).any()):
+                loss = float(ex_loss[j])
+                acc = float(ex_acc[j])
+            flops = 2.0 * e.n_params * len(r.tokens)
+            latency = (max(end - r.arrival, 0.0) if r.arrival is not None
+                       else end - t0)
+            out.append(Result(
+                uid=r.uid, expert=e.name, pred_losses=en.pred,
+                predictions=preds[j], loss=loss, accuracy=acc,
+                flops_proxy=flops, latency_s=latency, cached=en.cached,
+                flush_reason=reason))
+            self.stats.served += 1
+            self.stats.per_expert[e.name] += 1
+            self.stats.total_flops += flops
+            self.stats.latencies.append(latency)
+        return out
+
+    # -------------------------------------------------------- disciplines
+
     def run(self) -> list[Result]:
-        """Drain the queue; returns one Result per request."""
+        """FIFO drain: route the queue in admission-batch slices and
+        launch every per-expert group immediately, however ragged.
+
+        Returns one Result per request.  This is the baseline discipline
+        ``serve()`` is benchmarked against (``bench_scheduler``).
+        """
         results: list[Result] = []
         while self.queue:
             batch, self.queue = (self.queue[:self.max_batch],
                                  self.queue[self.max_batch:])
-            pred, choice = self._route_batch(batch)
+            pred, choice, cached = self._route_admitted(batch)
             by_expert: dict[int, list[int]] = defaultdict(list)
             for i, c in enumerate(choice):
                 by_expert[int(c)].append(i)
             for mi, idxs in sorted(by_expert.items()):
-                e = self.library[mi]
-                t0 = time.time()
-                preds, ex_loss, ex_acc = self._run_expert(
-                    e, [batch[i] for i in idxs])
-                dt = time.time() - t0
-                self.stats.expert_time_s += dt
-                for j, i in enumerate(idxs):
-                    r = batch[i]
-                    loss = acc = None
-                    if (r.targets is not None and r.mask is not None
-                            and r.mask.astype(bool).any()):
-                        loss = float(ex_loss[j])
-                        acc = float(ex_acc[j])
-                    flops = 2.0 * e.n_params * len(r.tokens)
-                    results.append(Result(
-                        uid=r.uid, expert=e.name, pred_losses=pred[i],
-                        predictions=preds[j], loss=loss, accuracy=acc,
-                        flops_proxy=flops, latency_s=dt / max(len(idxs), 1)))
-                    self.stats.served += 1
-                    self.stats.per_expert[e.name] += 1
-                    self.stats.total_flops += flops
+                entries = [LaneEntry(batch[i], pred[i], i, bool(cached[i]))
+                           for i in idxs]
+                results.extend(self._execute(mi, entries, "fifo"))
         return results
+
+    def serve(self, request_iter: Iterable[Request | None],
+              ) -> Iterator[Result]:
+        """Continuous batching: stream requests in, stream Results out.
+
+        ``request_iter`` yields ``Request``s, or ``None`` as an *idle
+        tick* (e.g. from an arrival simulator between arrivals) that
+        gives the scheduler a chance to fire ``max_wait_s`` deadline
+        flushes while no new work is arriving.  Admitted requests are
+        scored in batches of up to ``max_batch`` and pushed into
+        per-expert lanes; lanes flush on a full bucket or on deadline,
+        and everything still pending is drained when the iterator is
+        exhausted — shutdown leaves no request behind.  Requests already
+        enqueued via ``submit()`` are admitted first.
+
+        On an idle tick a partial admission batch is scored only once
+        its oldest request has aged past ``max_wait_s / 2`` — bursts
+        keep coalescing into batched router passes instead of
+        degenerating to batch-of-1 scoring, while the lane deadline
+        (measured from ``Request.arrival``) still bounds total wait.
+        """
+        sched = ExpertScheduler(len(self.library), self.lane_target,
+                                self.max_wait_s)
+        admitted: list[Request] = []
+
+        def _admit():
+            pred, choice, cached = self._route_admitted(admitted)
+            for i, r in enumerate(admitted):
+                sched.push(int(choice[i]), r, pred[i], bool(cached[i]))
+            admitted.clear()
+
+        if self.queue:
+            queued, self.queue = self.queue, []
+            request_iter = itertools.chain(queued, request_iter)
+
+        for item in request_iter:
+            if item is not None:
+                if item.arrival is None:
+                    item.arrival = self._now()
+                admitted.append(item)
+            # full batch admits immediately; a partial batch admits once
+            # its oldest request has aged, whether the wake-up was a new
+            # request or an idle tick — score it so its requests start
+            # aging in their lanes
+            if admitted and (len(admitted) >= self.max_batch
+                             or (self._now() - admitted[0].arrival
+                                 >= 0.5 * self.max_wait_s)):
+                _admit()
+            for mi, entries, reason in sched.pop_ready(self._now()):
+                yield from self._execute(mi, entries, reason)
+        # input exhausted: shutdown drain leaves no request behind
+        if admitted:
+            _admit()
+        for mi, entries, reason in sched.drain():
+            yield from self._execute(mi, entries, reason)
+        for mi, peak in sched.peaks().items():
+            name = self.library[mi].name
+            self.stats.lane_peaks[name] = max(
+                self.stats.lane_peaks.get(name, 0), peak)

@@ -60,7 +60,9 @@ class Request:
     targets: Optional[np.ndarray] = None
     mask: Optional[np.ndarray] = None
     lambdas: dict = dataclasses.field(default_factory=dict)
-    arrival: float = 0.0
+    arrival: Optional[float] = None    # enqueue time (engine clock); the
+    #                                    engine stamps it on admission if unset
+    priority: int = 0                  # higher flushes first from a full lane
 
 
 @dataclasses.dataclass
@@ -72,4 +74,6 @@ class Result:
     loss: float | None                 # measured, if targets supplied
     accuracy: float | None
     flops_proxy: float                 # 2 * params * tokens
-    latency_s: float
+    latency_s: float                   # true enqueue -> flush latency
+    cached: bool = False               # routing decision came from the cache
+    flush_reason: str = ""             # target | deadline | drain | fifo

@@ -1,0 +1,151 @@
+"""Cross-batch expert-affinity scheduler: the executor half of the
+two-stage serving pipeline.
+
+The routing stage (``TryageEngine._route_batch``) scores admitted
+requests and tags each with an expert choice; this module owns what
+happens next.  Every expert gets one *lane* of pending routed requests,
+and a micro-batch is launched only when
+
+  * the lane reaches its bucket ``target`` (a power of two, so the
+    flushed micro-batch is a full bucket with zero padded rows), or
+  * the lane's oldest request has waited longer than ``max_wait_s``
+    (deadline flush — latency wins over occupancy), or
+  * the engine is shutting down (drain flush — nothing is left behind).
+
+Because lanes persist across admission batches, same-expert requests
+from *different* admission batches coalesce into full buckets instead of
+launching as ragged per-batch tails — the continuous-batching behaviour
+the FIFO drain in ``TryageEngine.run`` cannot provide.
+
+When a lane is over-full, ``Request.priority`` decides who ships first:
+entries are ordered by (priority descending, admission order ascending),
+so high-priority requests ride the next flush and equal-priority
+requests stay FIFO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from repro.serving.requests import Request
+
+# flush reasons recorded in EngineStats.flushes
+FLUSH_TARGET = "target"
+FLUSH_DEADLINE = "deadline"
+FLUSH_DRAIN = "drain"
+
+
+@dataclasses.dataclass
+class LaneEntry:
+    """One routed request waiting in an expert lane."""
+
+    req: Request
+    pred: np.ndarray          # router's predicted losses row, (M,) f32
+    seq: int                  # global admission order, FIFO tiebreak
+    cached: bool = False      # routing decision came from the cache
+
+    @property
+    def sort_key(self) -> tuple:
+        return (-self.req.priority, self.seq)
+
+
+class Lane:
+    """Pending routed requests for one expert."""
+
+    def __init__(self, expert_idx: int):
+        self.expert_idx = expert_idx
+        self.entries: list[LaneEntry] = []
+        self.peak = 0
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def push(self, entry: LaneEntry) -> None:
+        self.entries.append(entry)
+        self.peak = max(self.peak, len(self.entries))
+
+    def oldest_wait(self, now: float) -> float:
+        if not self.entries:
+            return 0.0
+        return now - min(e.req.arrival for e in self.entries)
+
+    def take(self, n: int | None = None) -> list[LaneEntry]:
+        """Remove and return the ``n`` highest-(priority, FIFO) entries;
+        ``None`` takes everything."""
+        self.entries.sort(key=lambda e: e.sort_key)
+        if n is None or n >= len(self.entries):
+            out, self.entries = self.entries, []
+        else:
+            out, self.entries = self.entries[:n], self.entries[n:]
+        return out
+
+
+class ExpertScheduler:
+    """Lane manager for the expert-executor stage.
+
+    Parameters
+    ----------
+    n_experts:   library size — one lane per expert index.
+    target:      lane occupancy that triggers a full-bucket flush.
+                 Power-of-two targets flush with zero padded rows.
+    max_wait_s:  deadline for the oldest request in a lane; a lane whose
+                 oldest request has waited at least this long flushes on
+                 the next tick regardless of occupancy.
+    """
+
+    def __init__(self, n_experts: int, target: int, max_wait_s: float):
+        assert target >= 1 and max_wait_s >= 0.0
+        self.target = target
+        self.max_wait_s = max_wait_s
+        self.lanes = {i: Lane(i) for i in range(n_experts)}
+        self._seq = 0
+
+    # ------------------------------------------------------- routing in
+
+    def push(
+        self, expert_idx: int, req: Request, pred: np.ndarray, cached: bool = False
+    ) -> None:
+        self.lanes[expert_idx].push(LaneEntry(req, pred, self._seq, cached))
+        self._seq += 1
+
+    # ------------------------------------------------------ batches out
+
+    def pop_ready(self, now: float) -> Iterator[tuple[int, list[LaneEntry], str]]:
+        """Yield ``(expert_idx, entries, reason)`` micro-batches that are
+        ready to launch at time ``now``.
+
+        Full lanes flush in exact ``target``-sized buckets (repeatedly,
+        if a lane holds several buckets' worth); a deadline flush takes
+        the whole lane so no stragglers are left waiting again.
+        """
+        for lane in self.lanes.values():
+            while len(lane) >= self.target:
+                yield lane.expert_idx, lane.take(self.target), FLUSH_TARGET
+            if lane.entries and lane.oldest_wait(now) >= self.max_wait_s:
+                yield lane.expert_idx, lane.take(None), FLUSH_DEADLINE
+
+    def drain(self) -> Iterator[tuple[int, list[LaneEntry], str]]:
+        """Flush everything still pending — shutdown must leave no
+        request behind."""
+        for lane in self.lanes.values():
+            while len(lane) > self.target:
+                yield lane.expert_idx, lane.take(self.target), FLUSH_DRAIN
+            if lane.entries:
+                yield lane.expert_idx, lane.take(None), FLUSH_DRAIN
+
+    # -------------------------------------------------------- telemetry
+
+    @property
+    def pending(self) -> int:
+        return sum(len(lane) for lane in self.lanes.values())
+
+    def occupancy(self) -> dict[int, int]:
+        """Current pending depth per expert lane."""
+        return {i: len(lane) for i, lane in self.lanes.items() if len(lane)}
+
+    def peaks(self) -> dict[int, int]:
+        """Peak pending depth per expert lane over the scheduler's life."""
+        return {i: lane.peak for i, lane in self.lanes.items() if lane.peak}

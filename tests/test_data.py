@@ -4,8 +4,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.data.batching import BatchIterator, clm_batch, mlm_batch
-from repro.data.corpus import DOMAINS, DomainCorpus, MASK, N_SPECIAL
+from repro.data.batching import BatchIterator, mlm_batch
+from repro.data.corpus import DOMAINS, DomainCorpus
 
 
 def test_deterministic(corpus):

@@ -8,30 +8,16 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core.library import ExpertSpec, ModelLibrary, _enc
 from repro.core.objective import recency_constraint, size_constraint
 from repro.core.router import RouterConfig, init_router
 from repro.data.batching import mlm_batch
 from repro.serving import Request, TryageEngine, bucket_size
 
 
-def _library():
-    lib = ModelLibrary([
-        ExpertSpec("small", _enc("small", 1, 32, 2, 64, 64), {}, 0.5),
-        ExpertSpec("mid", _enc("mid", 1, 48, 2, 96, 64), {}, 0.5),
-        ExpertSpec("big", _enc("big", 2, 64, 2, 128, 64), {}, 0.9),
-    ])
-    from repro.models.model import count_params, init_model
-    for i, e in enumerate(lib.experts):
-        e.params, _ = init_model(jax.random.PRNGKey(i), e.cfg)
-        e.n_params = count_params(e.params)
-    return lib
-
-
 @pytest.fixture(scope="module")
-def engines():
+def engines(tiny_library):
     """(reference, fused) engines over the same library/router weights."""
-    lib = _library()
+    lib = tiny_library
     rc = RouterConfig(n_models=3, vocab_size=64, num_layers=1, d_model=32,
                       num_heads=2, d_ff=64)
     rp, _ = init_router(jax.random.PRNGKey(9), rc)

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, list_archs
-from repro.models import (count_params, decode_step, init_decode_state,
+from repro.models import (count_params, decode_step,
                           init_model, lm_loss, prefill)
 
 ARCHS = list_archs()

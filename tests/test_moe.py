@@ -1,11 +1,8 @@
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.models.common import AttnConfig, ModelConfig, MoEConfig
+from repro.models.common import ModelConfig, MoEConfig
 from repro.models.moe import apply_moe, init_moe
 
 

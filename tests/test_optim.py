@@ -1,6 +1,5 @@
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.optim import (adamw_init, adamw_update, cosine_schedule,
                          exp_decay_schedule, warmup_cosine_schedule)

@@ -1,7 +1,6 @@
 """Routing-objective invariants — including hypothesis property tests on
 the system's core math (eq. 1/4)."""
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -10,7 +9,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.library import ExpertSpec, ModelLibrary, _enc
 from repro.core.objective import (Constraint, route, routing_scores,
-                                  size_constraint, recency_constraint)
+                                  size_constraint)
 
 
 def _library(sizes=(100, 200, 400)):

@@ -1,0 +1,244 @@
+"""Continuous-batching scheduler edge cases: deadline flushes, priority
+ordering, decision-cache parity, drain-on-shutdown, true latency.
+
+Pure-scheduler tests need no models; engine-level tests run the tiny
+3-expert library with an injectable fake clock so deadlines and
+latencies are deterministic.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.objective import recency_constraint, size_constraint
+from repro.core.router import RouterConfig, init_router
+from repro.data.batching import mlm_batch
+from repro.serving import DecisionCache, ExpertScheduler, Request, TryageEngine
+from repro.serving.scheduler import FLUSH_DEADLINE, FLUSH_DRAIN, FLUSH_TARGET
+
+
+class Clock:
+    """Manually-advanced monotonic clock."""
+
+    def __init__(self, t=1.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _req(uid, priority=0, arrival=None, seed=None):
+    rng = np.random.default_rng(uid if seed is None else seed)
+    return Request(uid=uid, tokens=rng.integers(4, 64, 32).astype(np.int32),
+                   priority=priority, arrival=arrival)
+
+
+# ------------------------------------------------------ pure scheduler
+
+
+def test_full_lane_flushes_exact_target_bucket():
+    sched = ExpertScheduler(n_experts=2, target=4, max_wait_s=100.0)
+    for i in range(5):
+        sched.push(0, _req(i, arrival=1.0), np.zeros(2))
+    flushes = list(sched.pop_ready(now=1.0))
+    assert len(flushes) == 1
+    mi, entries, reason = flushes[0]
+    assert (mi, reason, len(entries)) == (0, FLUSH_TARGET, 4)
+    assert sched.pending == 1                 # remainder stays in the lane
+
+
+def test_priority_ordering_under_full_lane():
+    """When a lane is over-full, the target flush takes the highest
+    priorities first and keeps FIFO order among equals."""
+    sched = ExpertScheduler(n_experts=1, target=4, max_wait_s=100.0)
+    prios = [0, 5, 1, 0, 3, 0]
+    for i, p in enumerate(prios):
+        sched.push(0, _req(i, priority=p, arrival=1.0), np.zeros(2))
+    ((_, entries, _),) = sched.pop_ready(now=1.0)
+    assert [e.req.uid for e in entries] == [1, 4, 2, 0]   # 5, 3, 1, first 0
+    assert sorted(e.req.uid for e in sched.lanes[0].entries) == [3, 5]
+
+
+def test_deadline_flush_of_single_request_lane():
+    """A lone request must not wait forever for a full bucket."""
+    sched = ExpertScheduler(n_experts=2, target=8, max_wait_s=0.5)
+    sched.push(1, _req(0, arrival=1.0), np.zeros(2))
+    assert list(sched.pop_ready(now=1.2)) == []           # not due yet
+    flushes = list(sched.pop_ready(now=1.6))
+    assert len(flushes) == 1
+    mi, entries, reason = flushes[0]
+    assert (mi, reason, len(entries)) == (1, FLUSH_DEADLINE, 1)
+    assert sched.pending == 0
+
+
+def test_drain_flushes_everything():
+    sched = ExpertScheduler(n_experts=3, target=4, max_wait_s=100.0)
+    for i in range(7):
+        sched.push(i % 3, _req(i, arrival=1.0), np.zeros(2))
+    drained = [e.req.uid for _, ents, reason in sched.drain() for e in ents
+               if reason == FLUSH_DRAIN]
+    assert sorted(drained) == list(range(7))
+    assert sched.pending == 0
+
+
+# ------------------------- with engine (shared tiny_library fixture)
+
+
+def _engine(library, clock, **kw):
+    rc = RouterConfig(n_models=3, vocab_size=64, num_layers=1, d_model=32,
+                      num_heads=2, d_ff=64)
+    rp, _ = init_router(jax.random.PRNGKey(9), rc)
+    cons = [size_constraint(library), recency_constraint(library)]
+    kw.setdefault("max_batch", 8)
+    return TryageEngine(library, rp, rc, cons, now_fn=clock, **kw)
+
+
+def _requests(n, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(4, 64, size=(n, 32)).astype(np.int32)
+    mb = mlm_batch(toks, rng, 0.2, 64)
+    mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
+    return [Request(uid=i, tokens=mb["tokens"][i], targets=mb["targets"][i],
+                    mask=mb["mask"][i], lambdas=mix[i % len(mix)])
+            for i in range(n)]
+
+
+def test_serve_deadline_flush_single_request(tiny_library):
+    """One request trickles in, the lane never fills — the deadline tick
+    must still flush it mid-stream, not at drain."""
+    clock = Clock()
+    eng = _engine(tiny_library, clock, lane_target=64, max_wait_s=1.0)
+
+    def arrivals():
+        yield _req(0, seed=3)       # admitted on the next idle tick
+        yield None                  # routes the partial admission batch
+        clock.advance(2.0)          # now past max_wait_s
+        yield None                  # deadline tick
+        pytest.fail("deadline flush must yield before the iterator ends")
+
+    res = next(iter(eng.serve(arrivals())))
+    assert res.uid == 0
+    assert res.flush_reason == FLUSH_DEADLINE
+    assert eng.stats.flushes[FLUSH_DEADLINE] == 1
+
+
+def test_serve_drain_on_shutdown_leaves_nothing_behind(tiny_library):
+    """Huge targets and deadlines: nothing flushes until the request
+    iterator is exhausted, then every request drains exactly once."""
+    clock = Clock()
+    eng = _engine(tiny_library, clock, lane_target=1024, max_wait_s=1e9)
+    results = list(eng.serve(iter(_requests(21, seed=1))))
+    assert sorted(r.uid for r in results) == list(range(21))
+    assert all(r.flush_reason == FLUSH_DRAIN for r in results)
+    assert sum(eng.stats.flushes.values()) == eng.stats.flushes[FLUSH_DRAIN]
+
+
+def test_serve_admits_presubmitted_queue(tiny_library):
+    """Requests enqueued via submit() before serve() starts must flow
+    through the streaming pipeline, not sit in the queue forever."""
+    clock = Clock()
+    eng = _engine(tiny_library, clock, lane_target=4, max_wait_s=1e9)
+    for r in _requests(5, seed=6):
+        eng.submit(r)
+    results = list(eng.serve(iter([])))
+    assert sorted(r.uid for r in results) == list(range(5))
+    assert not eng.queue
+
+
+def test_serve_partial_batch_coalesces_on_young_ticks(tiny_library):
+    """Idle ticks must not degenerate scoring to batch-of-1: a partial
+    admission batch is only scored once it has aged max_wait_s/2."""
+    clock = Clock()
+    eng = _engine(tiny_library, clock, max_batch=8, lane_target=8,
+                  max_wait_s=1.0)
+    reqs = _requests(4, seed=8)
+
+    def arrivals():
+        for r in reqs:
+            yield r
+            yield None              # young tick between arrivals: no admit
+        clock.advance(1.0)
+        yield None                  # aged tick: one batched router pass
+
+    results = list(eng.serve(arrivals()))
+    assert sorted(r.uid for r in results) == list(range(4))
+    # all four requests were scored in a single batched router pass
+    assert eng.stats.router_batches == 1
+    assert eng.stats.flushes["deadline"] >= 1
+
+
+def test_serve_matches_fifo_choices(tiny_library):
+    """Same workload, same weights: the scheduler discipline must not
+    change which expert any request is routed to."""
+    clock = Clock()
+    fifo = _engine(tiny_library, clock, decision_cache=False)
+    stream = _engine(tiny_library, clock, decision_cache=False, lane_target=4,
+                     max_wait_s=1e9)
+    for r in _requests(21, seed=2):
+        fifo.submit(r)
+    by_uid = {r.uid: r.expert for r in fifo.run()}
+    for r in stream.serve(iter(_requests(21, seed=2))):
+        assert by_uid[r.uid] == r.expert
+
+
+def test_cache_hit_identical_to_fresh_score(tiny_library):
+    """A cache hit must return exactly the choice and predicted losses a
+    fresh score produces, and must be flagged on the Result."""
+    clock = Clock()
+    eng = _engine(tiny_library, clock)
+    reqs = _requests(6, seed=4)
+    for r in reqs:
+        eng.submit(r)
+    first = {r.uid: r for r in eng.run()}
+    assert eng.stats.cache_hits == 0 and eng.stats.cache_misses == 6
+    # identical tokens + lambdas again under fresh uids
+    again = _requests(6, seed=4)
+    for r in again:
+        eng.submit(r)
+    second = {r.uid: r for r in eng.run()}
+    assert eng.stats.cache_hits == 6
+    for uid in first:
+        assert second[uid].expert == first[uid].expert
+        assert second[uid].cached and not first[uid].cached
+        np.testing.assert_array_equal(second[uid].pred_losses,
+                                      first[uid].pred_losses)
+
+
+def test_cache_distinguishes_lambda_vectors():
+    """Same tokens under a different lambda vector is a different key."""
+    cache = DecisionCache(capacity=8)
+    toks = np.arange(32, dtype=np.int32)
+    k1 = DecisionCache.key(toks, {}, ["size"])
+    k2 = DecisionCache.key(toks, {"size": 8.0}, ["size"])
+    assert k1 != k2
+    cache.put(k1, np.zeros(3), 0)
+    assert cache.get(k2) is None and cache.get(k1) is not None
+
+
+def test_cache_lru_eviction():
+    cache = DecisionCache(capacity=2)
+    keys = [DecisionCache.key(np.array([i], np.int32), {}, []) for i in range(3)]
+    cache.put(keys[0], np.zeros(1), 0)
+    cache.put(keys[1], np.zeros(1), 0)
+    assert cache.get(keys[0]) is not None     # refresh 0 -> 1 becomes LRU
+    cache.put(keys[2], np.zeros(1), 0)        # evicts 1
+    assert cache.get(keys[1]) is None
+    assert cache.get(keys[0]) is not None and cache.get(keys[2]) is not None
+
+
+def test_latency_is_enqueue_to_flush(tiny_library):
+    """Result.latency_s reports true enqueue->flush wall time, not the
+    micro-batch time split evenly across the batch."""
+    clock = Clock()
+    eng = _engine(tiny_library, clock)
+    for r in _requests(4, seed=5):
+        eng.submit(r)                          # arrival stamped at t=1.0
+    clock.advance(2.5)                         # queue wait before the drain
+    results = eng.run()                        # fake clock: execution is 0s
+    assert all(r.latency_s == pytest.approx(2.5) for r in results)
+    p = eng.stats.latency_percentiles()
+    assert p["p50_s"] == pytest.approx(2.5)
+    assert p["p95_s"] == pytest.approx(2.5)

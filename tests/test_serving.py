@@ -7,7 +7,6 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.library import ExpertSpec, ModelLibrary, _enc
 from repro.core.objective import recency_constraint, size_constraint
 from repro.core.router import RouterConfig, init_router
 from repro.data.batching import mlm_batch
@@ -15,22 +14,14 @@ from repro.serving import Request, TryageEngine, parse_flags
 
 
 @pytest.fixture(scope="module")
-def tiny_engine():
-    """Engine over 3 untrained tiny experts (routing still well-defined)."""
-    lib = ModelLibrary([
-        ExpertSpec("small", _enc("small", 1, 32, 2, 64, 64), {}, 0.5),
-        ExpertSpec("mid", _enc("mid", 1, 48, 2, 96, 64), {}, 0.5),
-        ExpertSpec("big", _enc("big", 2, 64, 2, 128, 64), {}, 0.9),
-    ])
-    from repro.models.model import count_params, init_model
-    for i, e in enumerate(lib.experts):
-        e.params, _ = init_model(jax.random.PRNGKey(i), e.cfg)
-        e.n_params = count_params(e.params)
+def tiny_engine(tiny_library):
+    """Engine over the shared 3-expert tiny library (conftest.py)."""
     rc = RouterConfig(n_models=3, vocab_size=64, num_layers=1, d_model=32,
                       num_heads=2, d_ff=64)
     rp, _ = init_router(jax.random.PRNGKey(9), rc)
-    return TryageEngine(lib, rp, rc,
-                        [size_constraint(lib), recency_constraint(lib)],
+    return TryageEngine(tiny_library, rp, rc,
+                        [size_constraint(tiny_library),
+                         recency_constraint(tiny_library)],
                         max_batch=8)
 
 

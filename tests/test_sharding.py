@@ -8,13 +8,11 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
-from repro.launch.mesh import make_host_mesh
-from repro.sharding import DEFAULT_RULES, LogicalRules, logical_to_spec
+from repro.sharding import DEFAULT_RULES, logical_to_spec
 
 
 @pytest.fixture(scope="module")
 def mesh2():
-    n = 1
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
@@ -47,7 +45,6 @@ def test_divisibility_fallback():
 
 def test_divisibility_respected_on_simulated_mesh():
     """Pure-math check against a simulated 16x16 mesh via a fake mesh shape."""
-    import math
 
     class FakeMesh:
         shape = {"data": 16, "model": 16}

@@ -10,7 +10,7 @@ from repro.core.qtable import build_q_table, mlm_accuracy
 from repro.core.router import RouterConfig, init_router, predict_losses
 from repro.core.training import train_library, train_router
 from repro.core.experiment import _eval_batches
-from repro.data.corpus import DOMAINS, DomainCorpus
+from repro.data.corpus import DOMAINS
 
 
 @pytest.fixture(scope="module")
@@ -86,7 +86,6 @@ def test_router_beats_random_and_single_model(system):
 def test_tryage_near_oracle(system):
     from repro.core import baselines as bl
     q, pred = system["q_test"], system["pred"]
-    acc_oracle = mlm_accuracy(q, bl.oracle_choices(q))
     acc_t = mlm_accuracy(q, pred.argmin(1))
     best_single = max(mlm_accuracy(q, np.full(len(pred), i))
                       for i in range(3))

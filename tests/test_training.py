@@ -3,11 +3,10 @@ fits the Q-table, early stopping triggers."""
 
 import jax
 import numpy as np
-import pytest
 
 from repro.core.library import ExpertSpec, _enc, _mix
 from repro.core.router import RouterConfig, init_router, predict_losses
-from repro.core.training import TrainLog, train_expert, train_router
+from repro.core.training import train_expert, train_router
 from repro.data.batching import BatchIterator
 from repro.data.corpus import DOMAINS
 
