@@ -16,6 +16,8 @@ experiment is run automatically.
   router_decision  router-decision throughput, fused kernel vs host path
   serving   engine throughput on batched requests
   scheduler continuous-batching vs FIFO-drain throughput + padded rows
+  cascade   accuracy-vs-mean-size front: confidence-aware cascade
+            routing vs single-shot routing (+ escalation telemetry)
 
 Select a subset with ``--only kernels,scheduler``; ``--out bench.csv``
 additionally writes the CSV to a file (CI uploads it as an artifact);
@@ -334,6 +336,117 @@ def bench_scheduler(res):
     ]
 
 
+def bench_cascade(res):
+    """Cascade routing vs single-shot on the mixed-flag 256-request
+    workload: the accuracy-vs-mean-selected-size front.
+
+    Single-shot operating points come from sweeping an extra size-
+    penalty lambda on top of the mixed user flags (the paper's Pareto
+    knob).  Cascade points fix a strong small-model bias (lambda = 8)
+    and sweep the per-request confidence threshold: requests whose
+    chosen expert the router distrusts escalate to the next-larger
+    expert, spending parameters only where the router expects to be
+    wrong.  Cascade must strictly dominate at least one single-shot
+    point (>= accuracy at <= mean size, strict in one coordinate) —
+    a generator so every measured row is emitted before the gate
+    raises; under --strict a non-dominating front fails the run.
+    """
+    from repro.core import experiment as ex
+    from repro.core.objective import recency_constraint, size_constraint
+    from repro.core.training import calibrate_uncertainty
+    from repro.data.batching import mlm_batch
+    from repro.serving import Request, TryageEngine
+    art = ex.load_artifacts()
+    lib, rp, rc, corpus = (art["library"], art["router_params"], art["rc"],
+                           art["corpus"])
+    if "unc" not in rp:
+        rp = calibrate_uncertainty(rp, rc, art["test_tokens"],
+                                   art["q_test"]["loss"])
+    cons = [size_constraint(lib), recency_constraint(lib)]
+    sizes = {e.name: e.n_params for e in lib.experts}
+    max_size = max(sizes.values())
+
+    n = 256
+    rng = np.random.default_rng(0)
+    uniform = {d: 1.0 / 8 for d in corpus.tables}
+    toks, _ = corpus.sample_mixture(uniform, n, 128, rng)
+    mb = mlm_batch(toks, rng, 0.15, corpus.vocab_size)
+    flag_mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
+
+    def workload(extra_size_lam=0.0, min_conf=0.0):
+        reqs = []
+        for i in range(n):
+            lam = dict(flag_mix[i % len(flag_mix)])
+            if extra_size_lam:
+                lam["size"] = lam.get("size", 0.0) + extra_size_lam
+            reqs.append(Request(
+                uid=i, tokens=mb["tokens"][i], targets=mb["targets"][i],
+                mask=mb["mask"][i], lambdas=lam, min_confidence=min_conf))
+        return reqs
+
+    eng = TryageEngine(lib, rp, rc, cons, max_batch=32,
+                       cascade_max_depth=3)
+
+    def run_point(reqs):
+        eng.stats = type(eng.stats)()
+        eng.cache = type(eng.cache)(eng.cache.capacity)
+        for r in reqs:
+            eng.submit(r)
+        results = eng.run()
+        accs = [r.accuracy for r in results if r.accuracy is not None]
+        msize = np.mean([sizes[r.expert] for r in results]) / max_size
+        return float(np.mean(accs)), float(msize), eng.stats
+
+    single, casc = [], []
+    for lam in (0.0, 1.0, 4.0, 8.0):
+        acc, msize, _ = run_point(workload(extra_size_lam=lam))
+        single.append((acc, msize))
+        yield (f"cascade/single_shot/lam_{lam:g}/accuracy", acc,
+               f"mean_size_frac={msize:.4f}")
+
+    # cascade thresholds from the workload's own confidence quantiles:
+    # escalate roughly the least-confident 25/50/75/100% of requests
+    # rather than guessing absolute confidence values
+    base = workload(extra_size_lam=8.0)
+    confs = []
+    for i in range(0, n, 32):
+        chunk = base[i:i + 32]
+        _, choice = eng._score_batch(chunk)
+        conf = 1.0 / (1.0 + eng._sigma_batch(chunk))
+        confs.extend(float(conf[j, c]) for j, c in enumerate(choice))
+    quants = {"q25": 0.25, "q50": 0.5, "q75": 0.75, "q100": 1.0}
+    for qname, q in quants.items():
+        t = float(np.quantile(confs, q)) + 1e-6
+        acc, msize, stats = run_point(
+            workload(extra_size_lam=8.0, min_conf=t))
+        casc.append((acc, msize))
+        hist = ";".join(f"d{k}:{v}" for k, v in
+                        sorted(stats.cascade_depth_hist.items()))
+        yield (f"cascade/cascade/{qname}/accuracy", acc,
+               f"mean_size_frac={msize:.4f};threshold={t:.4f}")
+        yield (f"cascade/cascade/{qname}/escalations",
+               float(stats.escalations), hist)
+
+    # strict-domination gate: some cascade point at least matches a
+    # single-shot point in both coordinates and beats it in one
+    witness = ""
+    dominates = 0.0
+    for ca, cs in casc:
+        for sa, ss in single:
+            if ca >= sa and cs <= ss and (ca > sa or cs < ss):
+                dominates = 1.0
+                witness = (f"cascade({ca:.4f};{cs:.4f}) beats "
+                           f"single({sa:.4f};{ss:.4f})")
+                break
+        if dominates:
+            break
+    yield ("cascade/dominates_single_shot", dominates,
+           witness or "no dominating operating point")
+    if not dominates:
+        raise RuntimeError(
+            "cascade front does not dominate any single-shot point")
+
+
 # (name, fn, needs_experiment_artifacts)
 BENCHES = [
     ("fig2", bench_fig2, True),
@@ -348,6 +461,7 @@ BENCHES = [
     ("router_decision", bench_router_decision, False),
     ("serving", bench_serving, True),
     ("scheduler", bench_scheduler, True),
+    ("cascade", bench_cascade, True),
 ]
 
 

@@ -6,6 +6,20 @@ Constraints are scalar functions of expert metadata; the user supplies
 weights lambda_j (via flags in the prompt, or programmatically).  With a
 ground-truth Q table this is the Oracle router R_O; with router-predicted
 losses it is the predictive router R_P.
+
+Confidence-aware extension: the router's loss predictions carry no
+notion of their own reliability, so a misprediction commits the prompt
+to the wrong expert with full conviction.  Given a per-expert
+predictive-uncertainty estimate sigma (``core.router`` uncertainty
+head), this module derives a calibrated confidence score
+``1 / (1 + sigma)`` in (0, 1), an optional confidence-penalized variant
+of the routing score (``routing_scores(..., uncertainty, risk_weight)``),
+and the abstention/escalation rule the serving cascade applies: when the
+chosen expert's confidence falls below a request's threshold, walk the
+size-ordered escalation ladder to the next-larger expert until the
+router is confident enough (or the bounded depth / largest expert is
+reached).  The walk is cycle-safe by construction — positions in the
+ladder strictly increase.
 """
 
 from __future__ import annotations
@@ -58,16 +72,87 @@ def constraint_matrix(constraints: Sequence[Constraint],
 
 
 def routing_scores(pred_losses, constraints: Sequence[Constraint],
-                   lambdas: Sequence[float]):
-    """(…, n_models) combined routing loss L_R."""
+                   lambdas: Sequence[float], uncertainty=None,
+                   risk_weight: float = 0.0):
+    """(…, n_models) combined routing loss L_R.
+
+    With ``uncertainty`` (per-expert sigma, same shape as
+    ``pred_losses``) and ``risk_weight > 0`` the score is
+    confidence-penalized: experts whose loss prediction the router
+    distrusts are handicapped by ``risk_weight * sigma`` — an upper-
+    confidence-bound flavour of eq. 1.  The default (no uncertainty or
+    zero weight) reproduces the original objective exactly.
+    """
     assert len(constraints) == len(lambdas)
     score = jnp.asarray(pred_losses)
     for c, lam in zip(constraints, lambdas):
         score = score + lam * jnp.asarray(c.values, score.dtype)
+    if uncertainty is not None and risk_weight:
+        score = score + risk_weight * jnp.asarray(uncertainty, score.dtype)
     return score
 
 
 def route(pred_losses, constraints: Sequence[Constraint] = (),
-          lambdas: Sequence[float] = ()):
+          lambdas: Sequence[float] = (), uncertainty=None,
+          risk_weight: float = 0.0):
     """argmin of the routing objective. pred_losses: (…, n_models)."""
-    return jnp.argmin(routing_scores(pred_losses, constraints, lambdas), axis=-1)
+    return jnp.argmin(routing_scores(pred_losses, constraints, lambdas,
+                                     uncertainty, risk_weight), axis=-1)
+
+
+# ------------------------------------------------- confidence & cascade
+
+def confidence_scores(uncertainty):
+    """Map per-expert sigma >= 0 to a calibrated confidence in (0, 1].
+
+    ``1 / (1 + sigma)`` is monotone-decreasing in sigma and unit-free:
+    sigma is in the same log-loss units as L-hat, so confidence 0.5
+    means "the router expects to be off by about one full unit of loss".
+    """
+    return 1.0 / (1.0 + np.maximum(np.asarray(uncertainty, np.float64), 0.0))
+
+
+def escalation_order(library: ModelLibrary) -> list:
+    """Expert indices sorted by ascending size — the cascade ladder.
+
+    Ties keep library order (stable sort), so the ladder is a strict
+    total order and escalation cannot revisit an expert."""
+    return [int(i) for i in
+            np.argsort(library.sizes(), kind="stable")]
+
+
+def cascade_choice(choice: int, confidence, min_confidence: float,
+                   order: Sequence[int], max_depth: int,
+                   scores=None) -> tuple[int, int]:
+    """Abstention/escalation rule: final (expert, depth) for one request.
+
+    Starting from the objective's ``choice``, abstain and escalate while
+    the router's confidence in the current expert is below
+    ``min_confidence``, for at most ``max_depth`` steps.  Each step
+    targets a *strictly larger* expert (later in the size-sorted
+    ``order``): the literal next rung by default, or — when the
+    request's constrained routing ``scores`` (n_models,) are supplied —
+    the router-preferred larger expert, i.e. the best-scoring one among
+    those above the current rung.  Router-preferred escalation spends
+    the extra parameters where the router expects them to help instead
+    of walking blindly into a wrong-domain specialist.
+
+    ``min_confidence <= 0`` disables the cascade (single-shot behaviour,
+    depth 0).  Bounded and cycle-safe either way: the ladder position
+    strictly increases and the walk stops at the largest expert.
+    """
+    if min_confidence <= 0.0 or max_depth <= 0:
+        return int(choice), 0
+    conf = np.asarray(confidence, np.float64)
+    pos = order.index(int(choice))
+    depth = 0
+    while (conf[order[pos]] < min_confidence and pos + 1 < len(order)
+           and depth < max_depth):
+        if scores is None:
+            pos += 1
+        else:
+            rest = order[pos + 1:]
+            s = np.asarray(scores, np.float64)
+            pos += 1 + int(np.argmin([s[i] for i in rest]))
+        depth += 1
+    return int(order[pos]), depth

@@ -8,6 +8,15 @@ downstream losses — the learned Q function over routing actions.
 
 The router also exposes its pooled embedding (``router_embed``) for the
 latent-separation analysis of paper Fig. 4.
+
+Confidence-aware extension (cascade routing): an optional *uncertainty
+head* — a second MLP over the same pooled embedding — predicts the
+per-expert absolute residual |L-hat - L| of the loss head, i.e. how far
+off the router expects its own prediction to be.  ``sigma`` feeds the
+calibrated confidence score in ``core.objective`` and the serving
+engine's escalation rule.  Checkpoints trained before this head exists
+keep working: every consumer falls back to a constant prior
+(``sigma = 1``) when ``params`` has no ``"unc"`` entry.
 """
 
 from __future__ import annotations
@@ -45,26 +54,52 @@ class RouterConfig:
             act="gelu", dtype="float32")
 
 
-def init_router(key, rc: RouterConfig):
-    k_enc, k_h1, k_h2 = jax.random.split(key, 3)
+# softplus floor on predicted residuals: keeps sigma > 0 so confidence
+# 1/(1+sigma) stays strictly below 1 and escalation thresholds behave.
+UNC_FLOOR = 1e-3
+
+_HEAD_LOGICAL = {"w1": ("embed", "mlp"), "b1": ("mlp",),
+                 "w2": ("mlp", "vocab"), "b2": ("vocab",)}
+
+
+def _init_mlp_head(key, rc: RouterConfig):
+    k1, k2 = jax.random.split(key)
+    d, hh = rc.d_model, rc.head_hidden
+    return {
+        "w1": _init(k1, (d, hh), 1 / math.sqrt(d), jnp.float32),
+        "b1": jnp.zeros((hh,), jnp.float32),
+        "w2": _init(k2, (hh, rc.n_models), 1 / math.sqrt(hh), jnp.float32),
+        "b2": jnp.zeros((rc.n_models,), jnp.float32),
+    }
+
+
+def init_router(key, rc: RouterConfig, uncertainty: bool = False):
+    k_enc, k_head, k_unc = jax.random.split(key, 3)
     enc_cfg = rc.encoder_config()
     enc_params, enc_logical = init_model(k_enc, enc_cfg)
-    d, hh = rc.d_model, rc.head_hidden
     params = {
         "encoder": enc_params,
-        "head": {
-            "w1": _init(k_h1, (d, hh), 1 / math.sqrt(d), jnp.float32),
-            "b1": jnp.zeros((hh,), jnp.float32),
-            "w2": _init(k_h2, (hh, rc.n_models), 1 / math.sqrt(hh), jnp.float32),
-            "b2": jnp.zeros((rc.n_models,), jnp.float32),
-        },
+        "head": _init_mlp_head(k_head, rc),
     }
     logical = {
         "encoder": enc_logical,
-        "head": {"w1": ("embed", "mlp"), "b1": ("mlp",),
-                 "w2": ("mlp", "vocab"), "b2": ("vocab",)},
+        "head": dict(_HEAD_LOGICAL),
     }
+    if uncertainty:
+        params["unc"] = _init_mlp_head(k_unc, rc)
+        logical["unc"] = dict(_HEAD_LOGICAL)
     return params, logical
+
+
+def add_uncertainty_head(key, params: dict, rc: RouterConfig) -> dict:
+    """Retrofit an uncertainty head onto a pre-cascade checkpoint.
+
+    Returns a shallow copy of ``params`` with a fresh ``"unc"`` head;
+    encoder and loss head are shared by reference, so the loss
+    predictions of the returned params are bit-identical."""
+    out = dict(params)
+    out["unc"] = _init_mlp_head(key, rc)
+    return out
 
 
 def _pool(hidden, tokens):
@@ -92,6 +127,34 @@ def predict_losses(params, rc: RouterConfig, batch, use_kernel=False,
     if use_kernel:
         from repro.kernels.router_score import ops as rs_ops
         return rs_ops.router_head(emb, params["head"], interpret=interpret)
-    h = jax.nn.gelu(emb @ params["head"]["w1"] + params["head"]["b1"])
-    raw = h @ params["head"]["w2"] + params["head"]["b2"]
+    return losses_from_emb(params["head"], emb)
+
+
+def losses_from_emb(head_params, emb):
+    """L-hat (B, n_models) from a precomputed pooled embedding — the
+    single definition of the loss head's math (XLA path); training
+    reuses it so the trained function is exactly the served one."""
+    h = jax.nn.gelu(emb @ head_params["w1"] + head_params["b1"])
+    raw = h @ head_params["w2"] + head_params["b2"]
     return jax.nn.softplus(raw)
+
+
+def uncertainty_from_emb(unc_params, emb):
+    """sigma (B, n_models): predicted |L-hat - L| residual magnitude,
+    strictly positive.  Runs on a precomputed pooled embedding so the
+    serving engine can reuse the encoder pass of the decision path."""
+    h = jax.nn.gelu(emb @ unc_params["w1"] + unc_params["b1"])
+    raw = h @ unc_params["w2"] + unc_params["b2"]
+    return jax.nn.softplus(raw) + UNC_FLOOR
+
+
+def predict_uncertainty(params, rc: RouterConfig, batch):
+    """Per-expert predictive uncertainty sigma (B, n_models).
+
+    Falls back to the constant prior sigma = 1 when ``params`` carries no
+    uncertainty head (pre-cascade checkpoints): every expert is equally
+    untrusted, so confidence is flat and thresholds act globally."""
+    emb = router_embed(params, rc, batch)
+    if "unc" not in params:
+        return jnp.ones((emb.shape[0], rc.n_models), jnp.float32)
+    return uncertainty_from_emb(params["unc"], emb)

@@ -16,7 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.library import ExpertSpec, ModelLibrary
-from repro.core.router import RouterConfig, predict_losses
+from repro.core.router import (RouterConfig, add_uncertainty_head,
+                               losses_from_emb, predict_losses,
+                               router_embed, uncertainty_from_emb)
 from repro.data.batching import BatchIterator
 from repro.data.corpus import DomainCorpus
 from repro.models.model import count_params, init_model, lm_loss
@@ -77,16 +79,85 @@ def train_library(library: ModelLibrary, corpus: DomainCorpus, *, steps=300,
 # ------------------------------------------------------------ router
 
 def router_loss(params, rc: RouterConfig, batch, target_losses,
-                divergence="mse"):
-    """Divergence D(R(z;W) || L(z, M_i)) summed over the library (eq. 2)."""
-    pred = predict_losses(params, rc, batch)
+                divergence="mse", unc_weight: float = 0.5):
+    """Divergence D(R(z;W) || L(z, M_i)) summed over the library (eq. 2).
+
+    When ``params`` carries an uncertainty head (``"unc"``), a residual-
+    regression term trains it alongside loss prediction: sigma chases
+    ``stop_grad(|L-hat - L|)``, so the head learns to predict how wrong
+    the loss head is without perturbing the loss head's own gradients —
+    checkpoints without the head train exactly as before.
+    """
+    emb = router_embed(params, rc, batch)
+    pred = losses_from_emb(params["head"], emb)
     t = jnp.asarray(target_losses, jnp.float32)
     if divergence == "mse":
-        return jnp.mean(jnp.square(pred - t))
-    if divergence == "huber":
+        loss = jnp.mean(jnp.square(pred - t))
+    elif divergence == "huber":
         d = jnp.abs(pred - t)
-        return jnp.mean(jnp.where(d < 1.0, 0.5 * d * d, d - 0.5))
-    raise ValueError(divergence)
+        loss = jnp.mean(jnp.where(d < 1.0, 0.5 * d * d, d - 0.5))
+    else:
+        raise ValueError(divergence)
+    if "unc" in params and unc_weight:
+        resid = jax.lax.stop_gradient(jnp.abs(pred - t))
+        sigma = uncertainty_from_emb(params["unc"],
+                                     jax.lax.stop_gradient(emb))
+        loss = loss + unc_weight * jnp.mean(jnp.square(sigma - resid))
+    return loss
+
+
+def calibrate_uncertainty(router_params, rc: RouterConfig, tokens,
+                          target_losses, *, steps=300, batch=64, lr=3e-3,
+                          seed=0, verbose=False) -> dict:
+    """Retrofit + train an uncertainty head on a frozen router.
+
+    For checkpoints trained before the cascade existed: attaches a fresh
+    ``"unc"`` head (``router.add_uncertainty_head``) and regresses it
+    onto the frozen router's actual absolute residuals
+    ``|L-hat(z) - L(z, M_i)|`` over a held-out (tokens, loss) table.
+    Embeddings and residuals are precomputed once, so calibration is a
+    few hundred head-only MLP steps regardless of encoder size.  Returns
+    a params copy; encoder and loss head are untouched (shared by
+    reference), so routing decisions are bit-identical.
+    """
+    if "unc" not in router_params:
+        router_params = add_uncertainty_head(
+            jax.random.PRNGKey(seed + 17), router_params, rc)
+
+    # precompute pooled embeddings + residual targets, in chunks
+    embed = jax.jit(lambda t: router_embed(router_params, rc, {"tokens": t}))
+    score = jax.jit(lambda t: predict_losses(router_params, rc, {"tokens": t}))
+    B = 256
+    embs, preds = [], []
+    for i in range(0, len(tokens), B):
+        chunk = jnp.asarray(tokens[i:i + B])
+        embs.append(np.asarray(embed(chunk)))
+        preds.append(np.asarray(score(chunk)))
+    emb = np.concatenate(embs)
+    resid = np.abs(np.concatenate(preds)
+                   - np.asarray(target_losses, np.float32))
+
+    unc = router_params["unc"]
+    opt = adamw_init(unc)
+
+    @jax.jit
+    def step_fn(u, o, e, r):
+        l, g = jax.value_and_grad(lambda uu: jnp.mean(jnp.square(
+            uncertainty_from_emb(uu, e) - r)))(u)
+        u2, o2 = adamw_update(u, g, o, lr=lr, weight_decay=1e-5)
+        return u2, o2, l
+
+    rng = np.random.default_rng(seed)
+    for s in range(steps):
+        idx = rng.integers(0, len(emb), size=min(batch, len(emb)))
+        unc, opt, l = step_fn(unc, opt, jnp.asarray(emb[idx]),
+                              jnp.asarray(resid[idx]))
+        if verbose and s % 100 == 0:
+            print(f"  calibrate_uncertainty step {s} loss {float(l):.4f}",
+                  flush=True)
+    out = dict(router_params)
+    out["unc"] = unc
+    return out
 
 
 def train_router(router_params, rc: RouterConfig, train_data, val_data, *,

@@ -3,7 +3,8 @@ drive the streaming API with a Poisson arrival simulator.
 
   PYTHONPATH=src python -m repro.launch.serve --requests 256 [--fast] \
       [--use-kernel] [--no-buckets] [--fifo] [--arrival-rate 200] \
-      [--max-wait-s 0.05] [--priority-mix 0.9,0.08,0.02]
+      [--max-wait-s 0.05] [--priority-mix 0.9,0.08,0.02] \
+      [--cascade 0.6] [--cascade-depth 2]
 
 By default requests flow through ``TryageEngine.serve`` — the
 continuous-batching scheduler that coalesces same-expert requests
@@ -18,6 +19,14 @@ gives the fraction of requests at priority 0, 1, 2, ...
 (compiled on TPU/GPU, interpret on CPU); --no-buckets disables the
 power-of-two padding of per-expert micro-batches.  Loads artifacts from
 experiments/tryage if present, otherwise trains a reduced library first.
+
+--cascade T enables confidence-aware cascade routing: every request
+carries ``min_confidence = T``, and a request whose chosen expert the
+router is not confident about (calibrated confidence < T) escalates to
+the next-larger expert via the scheduler's escalation lanes, up to
+--cascade-depth steps.  If the loaded router checkpoint predates the
+uncertainty head, one is calibrated on the fly against the cached
+held-out Q-table (a few seconds, head-only training).
 """
 
 from __future__ import annotations
@@ -83,6 +92,11 @@ def main():
                     help="comma fractions of requests at priority 0,1,2,...")
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the router-decision cache")
+    ap.add_argument("--cascade", type=float, default=0.0, metavar="T",
+                    help="confidence threshold for cascade escalation "
+                         "(0 = single-shot routing, the default)")
+    ap.add_argument("--cascade-depth", type=int, default=2,
+                    help="max escalation steps per request")
     args = ap.parse_args()
 
     from repro.core import experiment as ex
@@ -102,6 +116,11 @@ def main():
 
     lib, rp, rc, corpus = (art["library"], art["router_params"], art["rc"],
                            art["corpus"])
+    if args.cascade > 0 and "unc" not in rp:
+        from repro.core.training import calibrate_uncertainty
+        print("calibrating uncertainty head on held-out Q-table", flush=True)
+        rp = calibrate_uncertainty(rp, rc, art["test_tokens"],
+                                   art["q_test"]["loss"])
     eng = TryageEngine(lib, rp, rc,
                        [size_constraint(lib), recency_constraint(lib)],
                        max_batch=args.max_batch,
@@ -109,7 +128,8 @@ def main():
                        buckets=not args.no_buckets,
                        lane_target=args.lane_target,
                        max_wait_s=args.max_wait_s,
-                       decision_cache=not args.no_cache)
+                       decision_cache=not args.no_cache,
+                       cascade_max_depth=args.cascade_depth)
 
     rng = np.random.default_rng(0)
     uniform = {d: 1.0 / 8 for d in corpus.tables}
@@ -120,7 +140,8 @@ def main():
     priorities = rng.choice(len(mix), size=args.requests, p=mix)
     reqs = [Request(uid=i, tokens=mb["tokens"][i], targets=mb["targets"][i],
                     mask=mb["mask"][i], lambdas=flag_mix[i % len(flag_mix)],
-                    priority=int(priorities[i]))
+                    priority=int(priorities[i]),
+                    min_confidence=args.cascade)
             for i in range(args.requests)]
 
     t0 = time.monotonic()
@@ -138,6 +159,7 @@ def main():
         "requests": len(results),
         "router_path": "fused-kernel" if args.use_kernel else "host",
         "discipline": "fifo-drain" if args.fifo else "continuous-batching",
+        "cascade_threshold": args.cascade,
         "arrival_rate": args.arrival_rate,
         "wall_s": round(dt, 2),
         "req_per_s": round(len(results) / dt, 1),

@@ -21,34 +21,59 @@ import numpy as np
 
 
 class DecisionCache:
-    """LRU cache from (token bytes, lambda vector) to router decisions."""
+    """LRU cache from (token bytes, lambda vector, confidence threshold)
+    to the cascade's final routing verdict."""
 
     def __init__(self, capacity: int = 4096):
         assert capacity >= 1
         self.capacity = capacity
-        self._entries: OrderedDict[tuple, tuple[np.ndarray, int]] = OrderedDict()
+        self._entries: OrderedDict[tuple, tuple[np.ndarray, int, int, float]] = (
+            OrderedDict()
+        )
 
     def __len__(self) -> int:
         return len(self._entries)
 
     @staticmethod
-    def key(tokens: np.ndarray, lambdas: dict, constraint_names: list) -> tuple:
+    def key(
+        tokens: np.ndarray,
+        lambdas: dict,
+        constraint_names: list,
+        min_confidence: float = 0.0,
+    ) -> tuple:
         """Exact cache key: token buffer bytes (plus dtype/shape, so
         equal byte strings from different layouts cannot collide) + the
         lambda vector laid out in engine constraint order (unknown
-        constraint names are ignored, matching ``lambda_matrix``)."""
+        constraint names are ignored, matching ``lambda_matrix``) + the
+        request's cascade threshold.  The threshold is part of the key
+        because the cached verdict is *post-cascade*: the same prompt at
+        a stricter threshold may legitimately escalate to a different
+        expert, and cached verdicts must stay exact."""
         lam = tuple(float(lambdas.get(name, 0.0)) for name in constraint_names)
-        return (tokens.tobytes(), tokens.dtype.str, tokens.shape, lam)
+        return (tokens.tobytes(), tokens.dtype.str, tokens.shape, lam,
+                float(min_confidence))
 
-    def get(self, key: tuple) -> tuple[np.ndarray, int] | None:
+    def get(self, key: tuple) -> tuple[np.ndarray, int, int, float] | None:
         entry = self._entries.get(key)
         if entry is None:
             return None
         self._entries.move_to_end(key)
         return entry
 
-    def put(self, key: tuple, pred: np.ndarray, choice: int) -> None:
-        self._entries[key] = (np.array(pred, np.float32), int(choice))
+    def put(
+        self,
+        key: tuple,
+        pred: np.ndarray,
+        choice: int,
+        depth: int = 0,
+        confidence: float = 1.0,
+    ) -> None:
+        self._entries[key] = (
+            np.array(pred, np.float32),
+            int(choice),
+            int(depth),
+            float(confidence),
+        )
         self._entries.move_to_end(key)
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)

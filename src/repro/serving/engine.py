@@ -19,9 +19,22 @@ exist on top of the same routing stage:
                back as micro-batches complete.
 
 Routing decisions are memoised in an exact LRU cache keyed on
-``(token bytes, lambda vector)`` (``repro.serving.cache``), so repeated
-prompts skip the router forward pass entirely; a hit returns the
-identical choice the fresh score produced.
+``(token bytes, lambda vector, confidence threshold)``
+(``repro.serving.cache``), so repeated prompts skip the router forward
+pass entirely; a hit returns the identical (post-cascade) verdict the
+fresh score produced.
+
+Confidence-aware cascade: a request may carry ``min_confidence > 0``.
+After scoring, the router's per-expert uncertainty head (constant prior
+for pre-cascade checkpoints) yields a calibrated confidence per expert;
+if the chosen expert's confidence is below the threshold, the request
+is *escalated* — re-enqueued into the scheduler's escalation lane for
+the next-larger expert (``core.objective.cascade_choice``, bounded
+depth, cycle-safe) instead of flushing with its first pick.  Cascade
+telemetry (escalations, depth histogram, per-tier latency) lands in
+``EngineStats``.  ``min_confidence = 0`` (the default) is single-shot:
+the sigma pass is skipped entirely and behaviour is identical to the
+pre-cascade engine.
 
 Two decision paths exist for the scoring itself:
 
@@ -56,8 +69,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.library import ModelLibrary
-from repro.core.objective import Constraint, constraint_matrix
-from repro.core.router import RouterConfig, predict_losses, router_embed
+from repro.core.objective import (Constraint, cascade_choice,
+                                  confidence_scores, constraint_matrix,
+                                  escalation_order)
+from repro.core.router import (RouterConfig, predict_losses,
+                               predict_uncertainty, router_embed)
 from repro.kernels.router_score import ops as rs_ops
 from repro.models.model import forward
 from repro.serving.cache import DecisionCache
@@ -96,18 +112,36 @@ class EngineStats:
     # router-decision cache telemetry.
     cache_hits: int = 0
     cache_misses: int = 0
+    # cascade telemetry: escalated-request count, histogram of cascade
+    # depth over all served requests (depth 0 = first pick), and true
+    # enqueue->flush latency bucketed by cascade tier.
+    escalations: int = 0
+    cascade_depth_hist: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    tier_latencies: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(
+            lambda: deque(maxlen=65536)))
 
     @property
     def cache_hit_rate(self) -> float:
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
 
-    def latency_percentiles(self) -> dict:
-        if not self.latencies:
+    @staticmethod
+    def _pctiles(latencies) -> dict:
+        if not latencies:
             return {"p50_s": 0.0, "p95_s": 0.0}
-        lat = np.asarray(self.latencies)
+        lat = np.asarray(latencies)
         return {"p50_s": float(np.percentile(lat, 50)),
                 "p95_s": float(np.percentile(lat, 95))}
+
+    def latency_percentiles(self) -> dict:
+        return self._pctiles(self.latencies)
+
+    def tier_latency_percentiles(self) -> dict:
+        """p50/p95 enqueue->flush latency per cascade tier (depth)."""
+        return {int(tier): self._pctiles(lat)
+                for tier, lat in sorted(self.tier_latencies.items())}
 
     def summary(self) -> dict:
         return {"served": self.served,
@@ -125,7 +159,15 @@ class EngineStats:
                             self.latency_percentiles().items()},
                 "cache": {"hits": self.cache_hits,
                           "misses": self.cache_misses,
-                          "hit_rate": round(self.cache_hit_rate, 4)}}
+                          "hit_rate": round(self.cache_hit_rate, 4)},
+                "cascade": {
+                    "escalations": self.escalations,
+                    "depth_hist": {int(k): v for k, v in
+                                   sorted(self.cascade_depth_hist.items())},
+                    "tier_latency": {
+                        tier: {k: round(v, 6) for k, v in p.items()}
+                        for tier, p in
+                        self.tier_latency_percentiles().items()}}}
 
 
 class TryageEngine:
@@ -139,7 +181,10 @@ class TryageEngine:
     - ``max_wait_s``: deadline for the oldest request in a lane — a lane
       holding even a single request flushes once it has waited this long.
     - ``decision_cache`` / ``cache_capacity``: exact LRU memoisation of
-      routing decisions keyed on (token bytes, lambda vector).
+      routing decisions keyed on (token bytes, lambda vector,
+      confidence threshold).
+    - ``cascade_max_depth``: bound on escalation steps per request; 0
+      disables the cascade engine-wide regardless of request thresholds.
     - ``now_fn``: engine clock (injectable for deterministic tests).
     """
 
@@ -149,6 +194,7 @@ class TryageEngine:
                  interpret: bool | None = None, buckets: bool = True,
                  lane_target: int | None = None, max_wait_s: float = 0.05,
                  decision_cache: bool = True, cache_capacity: int = 4096,
+                 cascade_max_depth: int = 2,
                  now_fn: Callable[[], float] = time.monotonic):
         assert len(library) == rc.n_models
         self.library = library
@@ -163,12 +209,19 @@ class TryageEngine:
         self.max_wait_s = max_wait_s
         self.cache = (DecisionCache(cache_capacity) if decision_cache
                       else None)
+        self.cascade_max_depth = cascade_max_depth
+        self._esc_order = escalation_order(library)
         self._now = now_fn
         self.queue: list[Request] = []
         self.stats = EngineStats()
 
         self._cnames = [c.name for c in self.constraints]
         self._cmat = constraint_matrix(self.constraints, rc.n_models)
+
+        # lazy sigma pass: only cascade-enabled requests pay for it, so
+        # the min_confidence=0 path runs the exact pre-cascade jits
+        self._sigma = jax.jit(
+            lambda p, toks: predict_uncertainty(p, rc, {"tokens": toks}))
 
         if use_kernel:
             cmat = self._cmat
@@ -260,21 +313,80 @@ class TryageEngine:
         self.stats.router_batches += 1
         return pred, choice
 
-    def _route_admitted(self, reqs: list[Request]) -> tuple[
-            np.ndarray, np.ndarray, np.ndarray]:
-        """Route a batch through the decision cache: cached requests skip
-        scoring, misses are scored as one (smaller) batch and inserted.
+    def _sigma_batch(self, reqs: list[Request]) -> np.ndarray:
+        """Per-expert predictive uncertainty sigma (B, M) for a batch —
+        a second (tiny) router pass, paid only by cascade traffic.
 
-        Returns ``(pred_losses (B, M), choice (B,), cached (B,) bool)``.
+        Deliberately NOT fused with the scoring jit: reusing its
+        embedding would change the compiled program and forfeit the
+        bit-for-bit single-shot parity with the pre-cascade engine that
+        tests/test_cascade.py enforces.  The router is BERT-tiny scale,
+        so the duplicate encoder pass is noise next to expert
+        execution; revisit only if the router grows."""
+        B = len(reqs)
+        toks = np.stack([r.tokens for r in reqs])
+        Bp = self._bucket(B)
+        if Bp != B:
+            toks = np.concatenate(
+                [toks, np.zeros((Bp - B,) + toks.shape[1:], toks.dtype)])
+        return np.asarray(
+            self._sigma(self.router_params, jnp.asarray(toks)))[:B]
+
+    def _cascade(self, reqs: list[Request], pred: np.ndarray,
+                 choice: np.ndarray) -> tuple[np.ndarray, np.ndarray,
+                                              np.ndarray]:
+        """Abstention/escalation pass over a scored batch.
+
+        Returns ``(final_choice (B,), depth (B,), confidence (B,))``.
+        When no request in the batch asks for a confidence floor the
+        sigma pass is skipped and the scores' choice passes through
+        untouched — the single-shot fast path.  Escalation is router-
+        preferred: each step re-runs the constrained objective over the
+        strictly-larger experts (``cascade_choice`` with the request's
+        lambda-weighted scores).
+        """
+        B = len(reqs)
+        depth = np.zeros(B, np.int64)
+        conf = np.ones(B, np.float64)
+        if (self.cascade_max_depth <= 0
+                or not any(r.min_confidence > 0.0 for r in reqs)):
+            return choice, depth, conf
+        confm = confidence_scores(self._sigma_batch(reqs))
+        # constrained routing scores L-hat + sum_j lambda_j C_j, (B, M)
+        scores = pred + lambda_matrix(reqs, self._cnames) @ self._cmat
+        final = np.array(choice, np.int64, copy=True)
+        for i, r in enumerate(reqs):
+            if r.min_confidence <= 0.0:
+                continue
+            final[i], depth[i] = cascade_choice(
+                int(choice[i]), confm[i], r.min_confidence,
+                self._esc_order, self.cascade_max_depth, scores[i])
+            conf[i] = confm[i, final[i]]
+        return final, depth, conf
+
+    def _route_admitted(self, reqs: list[Request]) -> tuple[
+            np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Route a batch through the decision cache: cached requests skip
+        scoring, misses are scored as one (smaller) batch, cascaded, and
+        inserted.  The cached verdict is post-cascade (the key carries
+        the confidence threshold, so it stays exact).
+
+        Returns ``(pred_losses (B, M), choice (B,), cached (B,) bool,
+        depth (B,) int, confidence (B,) float)`` — ``choice`` is the
+        final post-escalation expert.
         """
         B = len(reqs)
         if self.cache is None:
             pred, choice = self._score_batch(reqs)
-            return pred, choice, np.zeros(B, bool)
+            choice, depth, conf = self._cascade(reqs, pred, choice)
+            return pred, choice, np.zeros(B, bool), depth, conf
         pred = np.zeros((B, self.rc.n_models), np.float32)
         choice = np.zeros(B, np.int64)
         cached = np.zeros(B, bool)
-        keys = [DecisionCache.key(r.tokens, r.lambdas, self._cnames)
+        depth = np.zeros(B, np.int64)
+        conf = np.ones(B, np.float64)
+        keys = [DecisionCache.key(r.tokens, r.lambdas, self._cnames,
+                                  r.min_confidence)
                 for r in reqs]
         misses = []
         for i, key in enumerate(keys):
@@ -282,23 +394,29 @@ class TryageEngine:
             if hit is None:
                 misses.append(i)
             else:
-                pred[i], choice[i] = hit
+                pred[i], choice[i], depth[i], conf[i] = hit
                 cached[i] = True
         if misses:
-            mpred, mchoice = self._score_batch([reqs[i] for i in misses])
+            miss_reqs = [reqs[i] for i in misses]
+            mpred, mchoice = self._score_batch(miss_reqs)
+            mchoice, mdepth, mconf = self._cascade(miss_reqs, mpred, mchoice)
             for j, i in enumerate(misses):
                 pred[i] = mpred[j]
                 choice[i] = mchoice[j]
-                self.cache.put(keys[i], mpred[j], mchoice[j])
+                depth[i] = mdepth[j]
+                conf[i] = mconf[j]
+                self.cache.put(keys[i], mpred[j], mchoice[j],
+                               int(mdepth[j]), float(mconf[j]))
         self.stats.cache_hits += B - len(misses)
         self.stats.cache_misses += len(misses)
-        return pred, choice, cached
+        return pred, choice, cached, depth, conf
 
     def _route_batch(self, reqs: list[Request]) -> tuple[np.ndarray,
                                                          np.ndarray]:
         """Route one batch of requests (cache-aware); see
-        ``_route_admitted`` for the variant that also reports hits."""
-        pred, choice, _ = self._route_admitted(reqs)
+        ``_route_admitted`` for the variant that also reports hits,
+        cascade depth and confidence."""
+        pred, choice, _, _, _ = self._route_admitted(reqs)
         return pred, choice
 
     # --------------------------------------------------- expert executor
@@ -352,11 +470,16 @@ class TryageEngine:
                 uid=r.uid, expert=e.name, pred_losses=en.pred,
                 predictions=preds[j], loss=loss, accuracy=acc,
                 flops_proxy=flops, latency_s=latency, cached=en.cached,
-                flush_reason=reason))
+                flush_reason=reason, cascade_depth=en.depth,
+                confidence=en.confidence))
             self.stats.served += 1
             self.stats.per_expert[e.name] += 1
             self.stats.total_flops += flops
             self.stats.latencies.append(latency)
+            self.stats.cascade_depth_hist[en.depth] += 1
+            self.stats.tier_latencies[en.depth].append(latency)
+            if en.depth > 0:
+                self.stats.escalations += 1
         return out
 
     # -------------------------------------------------------- disciplines
@@ -372,12 +495,13 @@ class TryageEngine:
         while self.queue:
             batch, self.queue = (self.queue[:self.max_batch],
                                  self.queue[self.max_batch:])
-            pred, choice, cached = self._route_admitted(batch)
+            pred, choice, cached, depth, conf = self._route_admitted(batch)
             by_expert: dict[int, list[int]] = defaultdict(list)
             for i, c in enumerate(choice):
                 by_expert[int(c)].append(i)
             for mi, idxs in sorted(by_expert.items()):
-                entries = [LaneEntry(batch[i], pred[i], i, bool(cached[i]))
+                entries = [LaneEntry(batch[i], pred[i], i, bool(cached[i]),
+                                     int(depth[i]), float(conf[i]))
                            for i in idxs]
                 results.extend(self._execute(mi, entries, "fifo"))
         return results
@@ -407,9 +531,10 @@ class TryageEngine:
         admitted: list[Request] = []
 
         def _admit():
-            pred, choice, cached = self._route_admitted(admitted)
+            pred, choice, cached, depth, conf = self._route_admitted(admitted)
             for i, r in enumerate(admitted):
-                sched.push(int(choice[i]), r, pred[i], bool(cached[i]))
+                sched.push(int(choice[i]), r, pred[i], bool(cached[i]),
+                           int(depth[i]), float(conf[i]))
             admitted.clear()
 
         if self.queue:
@@ -438,5 +563,9 @@ class TryageEngine:
             yield from self._execute(mi, entries, reason)
         for mi, peak in sched.peaks().items():
             name = self.library[mi].name
+            self.stats.lane_peaks[name] = max(
+                self.stats.lane_peaks.get(name, 0), peak)
+        for mi, peak in sched.esc_peaks().items():
+            name = self.library[mi].name + "@esc"
             self.stats.lane_peaks[name] = max(
                 self.stats.lane_peaks.get(name, 0), peak)

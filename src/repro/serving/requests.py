@@ -63,6 +63,9 @@ class Request:
     arrival: Optional[float] = None    # enqueue time (engine clock); the
     #                                    engine stamps it on admission if unset
     priority: int = 0                  # higher flushes first from a full lane
+    min_confidence: float = 0.0        # cascade threshold: escalate while the
+    #                                    chosen expert's confidence is below
+    #                                    this (0 = single-shot, no cascade)
 
 
 @dataclasses.dataclass
@@ -77,3 +80,5 @@ class Result:
     latency_s: float                   # true enqueue -> flush latency
     cached: bool = False               # routing decision came from the cache
     flush_reason: str = ""             # target | deadline | drain | fifo
+    cascade_depth: int = 0             # escalation steps taken (0 = first pick)
+    confidence: float = 1.0            # router confidence in the final expert

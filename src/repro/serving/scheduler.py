@@ -21,6 +21,15 @@ When a lane is over-full, ``Request.priority`` decides who ships first:
 entries are ordered by (priority descending, admission order ascending),
 so high-priority requests ride the next flush and equal-priority
 requests stay FIFO.
+
+Cascade escalation lanes: requests the routing stage *escalated* (the
+router's confidence in its first pick fell below the request's
+``min_confidence`` threshold, see ``core.objective.cascade_choice``) are
+re-enqueued into a second, per-expert *escalation lane* targeting the
+larger expert instead of riding the regular lane.  Escalation lanes
+flush under the same target/deadline/drain rules but keep recovered
+traffic separate, so tier-0 micro-batches stay full and per-tier
+telemetry (``EngineStats``) stays honest.
 """
 
 from __future__ import annotations
@@ -46,6 +55,8 @@ class LaneEntry:
     pred: np.ndarray          # router's predicted losses row, (M,) f32
     seq: int                  # global admission order, FIFO tiebreak
     cached: bool = False      # routing decision came from the cache
+    depth: int = 0            # cascade escalation steps (0 = first pick)
+    confidence: float = 1.0   # router confidence in the final expert
 
     @property
     def sort_key(self) -> tuple:
@@ -101,14 +112,27 @@ class ExpertScheduler:
         self.target = target
         self.max_wait_s = max_wait_s
         self.lanes = {i: Lane(i) for i in range(n_experts)}
+        # escalation lanes: cascade-recovered traffic, one per expert
+        self.esc_lanes = {i: Lane(i) for i in range(n_experts)}
         self._seq = 0
 
     # ------------------------------------------------------- routing in
 
     def push(
-        self, expert_idx: int, req: Request, pred: np.ndarray, cached: bool = False
+        self,
+        expert_idx: int,
+        req: Request,
+        pred: np.ndarray,
+        cached: bool = False,
+        depth: int = 0,
+        confidence: float = 1.0,
     ) -> None:
-        self.lanes[expert_idx].push(LaneEntry(req, pred, self._seq, cached))
+        """Enqueue a routed request; escalated requests (``depth > 0``)
+        are re-enqueued into the target expert's escalation lane."""
+        lanes = self.esc_lanes if depth > 0 else self.lanes
+        lanes[expert_idx].push(
+            LaneEntry(req, pred, self._seq, cached, depth, confidence)
+        )
         self._seq += 1
 
     # ------------------------------------------------------ batches out
@@ -120,8 +144,9 @@ class ExpertScheduler:
         Full lanes flush in exact ``target``-sized buckets (repeatedly,
         if a lane holds several buckets' worth); a deadline flush takes
         the whole lane so no stragglers are left waiting again.
+        Escalation lanes follow the same rules after the regular lanes.
         """
-        for lane in self.lanes.values():
+        for lane in self._all_lanes():
             while len(lane) >= self.target:
                 yield lane.expert_idx, lane.take(self.target), FLUSH_TARGET
             if lane.entries and lane.oldest_wait(now) >= self.max_wait_s:
@@ -129,23 +154,35 @@ class ExpertScheduler:
 
     def drain(self) -> Iterator[tuple[int, list[LaneEntry], str]]:
         """Flush everything still pending — shutdown must leave no
-        request behind."""
-        for lane in self.lanes.values():
+        request behind, in either lane tier."""
+        for lane in self._all_lanes():
             while len(lane) > self.target:
                 yield lane.expert_idx, lane.take(self.target), FLUSH_DRAIN
             if lane.entries:
                 yield lane.expert_idx, lane.take(None), FLUSH_DRAIN
 
+    def _all_lanes(self):
+        yield from self.lanes.values()
+        yield from self.esc_lanes.values()
+
     # -------------------------------------------------------- telemetry
 
     @property
     def pending(self) -> int:
-        return sum(len(lane) for lane in self.lanes.values())
+        return sum(len(lane) for lane in self._all_lanes())
 
     def occupancy(self) -> dict[int, int]:
-        """Current pending depth per expert lane."""
-        return {i: len(lane) for i, lane in self.lanes.items() if len(lane)}
+        """Current pending depth per expert lane (both tiers pooled)."""
+        out = {}
+        for lane in self._all_lanes():
+            if len(lane):
+                out[lane.expert_idx] = out.get(lane.expert_idx, 0) + len(lane)
+        return out
 
     def peaks(self) -> dict[int, int]:
-        """Peak pending depth per expert lane over the scheduler's life."""
+        """Peak pending depth per regular expert lane."""
         return {i: lane.peak for i, lane in self.lanes.items() if lane.peak}
+
+    def esc_peaks(self) -> dict[int, int]:
+        """Peak pending depth per escalation lane."""
+        return {i: lane.peak for i, lane in self.esc_lanes.items() if lane.peak}

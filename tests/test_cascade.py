@@ -1,0 +1,286 @@
+"""Confidence-aware cascade routing: escalation, calibration, telemetry,
+and the single-shot parity guarantee.
+
+The parity tests are the contract the cascade subsystem was built under:
+with ``min_confidence=0`` (the default) the engine must reproduce the
+pre-cascade (PR 2) behaviour bit-for-bit — same expert choices, same
+Result fields, same EngineStats — whether or not the router checkpoint
+carries an uncertainty head.  Deliberately hypothesis-free so the whole
+module runs without the optional property-testing dep.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.objective import (cascade_choice, confidence_scores,
+                                  escalation_order, recency_constraint,
+                                  route, size_constraint)
+from repro.core.router import (RouterConfig, add_uncertainty_head,
+                               init_router, predict_losses,
+                               predict_uncertainty)
+from repro.core.training import calibrate_uncertainty
+from repro.data.batching import mlm_batch
+from repro.serving import DecisionCache, Request, TryageEngine
+
+
+RC = RouterConfig(n_models=3, vocab_size=64, num_layers=1, d_model=32,
+                  num_heads=2, d_ff=64)
+
+
+class Clock:
+    def __init__(self, t=1.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def router_params():
+    """(pre-cascade params, same params + retrofitted unc head)."""
+    rp, _ = init_router(jax.random.PRNGKey(9), RC)
+    return rp, add_uncertainty_head(jax.random.PRNGKey(3), rp, RC)
+
+
+def _requests(n, seed=0, min_confidence=0.0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(4, 64, size=(n, 32)).astype(np.int32)
+    mb = mlm_batch(toks, rng, 0.2, 64)
+    mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
+    return [Request(uid=i, tokens=mb["tokens"][i], targets=mb["targets"][i],
+                    mask=mb["mask"][i], lambdas=mix[i % len(mix)],
+                    min_confidence=min_confidence)
+            for i in range(n)]
+
+
+def _engine(library, params, clock, **kw):
+    cons = [size_constraint(library), recency_constraint(library)]
+    kw.setdefault("max_batch", 8)
+    return TryageEngine(library, params, RC, cons, now_fn=clock, **kw)
+
+
+# ----------------------------------------------------- objective layer
+
+
+def test_confidence_scores_monotone_and_bounded():
+    sigma = np.array([[0.0, 0.5, 1.0, 4.0]])
+    conf = confidence_scores(sigma)
+    assert conf.shape == sigma.shape
+    assert (np.diff(conf[0]) < 0).all()          # larger sigma, less trust
+    assert (conf > 0).all() and (conf <= 1.0).all()
+
+
+def test_escalation_order_is_ascending_sizes(tiny_library):
+    order = escalation_order(tiny_library)
+    sizes = tiny_library.sizes()
+    assert sorted(order) == list(range(len(tiny_library)))
+    assert (np.diff(sizes[order]) >= 0).all()
+
+
+def test_cascade_choice_disabled_and_bounds():
+    conf = np.array([0.1, 0.2, 0.3])
+    order = [0, 1, 2]
+    # disabled: threshold 0 or depth 0 pass the choice through
+    assert cascade_choice(1, conf, 0.0, order, 4) == (1, 0)
+    assert cascade_choice(1, conf, 0.9, order, 0) == (1, 0)
+    # bounded depth: one step at a time, never past the ladder top
+    assert cascade_choice(0, conf, 0.9, order, 1) == (1, 1)
+    assert cascade_choice(0, conf, 0.9, order, 8) == (2, 2)
+    assert cascade_choice(2, conf, 0.9, order, 8) == (2, 0)
+
+
+def test_cascade_choice_stops_at_first_confident_expert():
+    conf = np.array([0.1, 0.8, 0.3])
+    assert cascade_choice(0, conf, 0.5, [0, 1, 2], 8) == (1, 1)
+
+
+def test_cascade_choice_router_preferred_jump():
+    """With constrained scores supplied, an escalation step jumps to the
+    best-scoring expert among the strictly-larger ones."""
+    conf = np.array([0.1, 0.1, 0.9, 0.9])
+    scores = np.array([0.1, 0.5, 0.4, 0.2])
+    order = [0, 1, 2, 3]
+    # from 0, larger experts are {1,2,3}; best score among them is 3
+    assert cascade_choice(0, conf, 0.5, order, 8, scores) == (3, 1)
+    # depth bound still applies before the jump resolves confidence
+    conf2 = np.array([0.1, 0.1, 0.1, 0.1])
+    final, depth = cascade_choice(0, conf2, 0.5, order, 1, scores)
+    assert (final, depth) == (3, 1)
+
+
+def test_routing_scores_uncertainty_term_shifts_choice():
+    pred = np.array([[0.30, 0.31, 0.32]])        # near-tie, 0 wins raw
+    sigma = np.array([[5.0, 0.1, 0.2]])          # ... but 0 is untrusted
+    assert int(route(pred)[0]) == 0
+    assert int(route(pred, uncertainty=sigma, risk_weight=0.1)[0]) == 1
+
+
+# --------------------------------------------------------- router layer
+
+
+def test_predict_uncertainty_constant_prior_without_head(router_params):
+    rp, _ = router_params
+    toks = np.arange(1, 33, dtype=np.int32)[None].repeat(3, axis=0)
+    sigma = np.asarray(predict_uncertainty(rp, RC, {"tokens": toks}))
+    np.testing.assert_array_equal(sigma, np.ones((3, 3), np.float32))
+
+
+def test_uncertainty_head_positive_and_loss_preds_unchanged(router_params):
+    rp, rp_unc = router_params
+    toks = np.arange(1, 33, dtype=np.int32)[None].repeat(3, axis=0)
+    sigma = np.asarray(predict_uncertainty(rp_unc, RC, {"tokens": toks}))
+    assert sigma.shape == (3, 3) and (sigma > 0).all()
+    a = np.asarray(predict_losses(rp, RC, {"tokens": toks}))
+    b = np.asarray(predict_losses(rp_unc, RC, {"tokens": toks}))
+    np.testing.assert_array_equal(a, b)          # heads shared by reference
+
+
+def test_calibrate_uncertainty_learns_residual_scale():
+    """The calibrated head must track the frozen router's actual
+    residuals far better than the untrained head it starts from."""
+    rp, _ = init_router(jax.random.PRNGKey(0), RC)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, 64, size=(96, 32)).astype(np.int32)
+    target = np.asarray(
+        predict_losses(rp, RC, {"tokens": toks}))
+    # synthetic ground truth: router is off by a known per-expert bias
+    bias = np.array([0.05, 0.6, 2.0], np.float32)
+    target = target + bias[None, :]
+    cal = calibrate_uncertainty(rp, RC, toks, target, steps=400, seed=1)
+    assert "unc" not in rp                       # original untouched
+    sigma = np.asarray(predict_uncertainty(cal, RC, {"tokens": toks}))
+    err = np.abs(sigma.mean(0) - bias)
+    assert (err < 0.25 * np.maximum(bias, 0.2)).all(), (sigma.mean(0), bias)
+    # loss predictions are bit-identical after calibration
+    np.testing.assert_array_equal(
+        np.asarray(predict_losses(rp, RC, {"tokens": toks})),
+        np.asarray(predict_losses(cal, RC, {"tokens": toks})))
+
+
+# ---------------------------------------------------------- cache layer
+
+
+def test_cache_key_distinguishes_confidence_threshold():
+    toks = np.arange(32, dtype=np.int32)
+    k0 = DecisionCache.key(toks, {}, ["size"], 0.0)
+    k1 = DecisionCache.key(toks, {}, ["size"], 0.7)
+    assert k0 != k1
+    cache = DecisionCache(capacity=4)
+    cache.put(k0, np.zeros(3), 0, 0, 1.0)
+    cache.put(k1, np.zeros(3), 2, 2, 0.4)
+    assert cache.get(k0)[1:] == (0, 0, 1.0)
+    assert cache.get(k1)[1:] == (2, 2, 0.4)
+
+
+def test_cached_cascade_verdict_is_exact(tiny_library, router_params):
+    """A repeated prompt under the same threshold must return the same
+    post-cascade expert, depth and confidence, flagged as cached."""
+    _, rp_unc = router_params
+    eng = _engine(tiny_library, rp_unc, Clock())
+    for r in _requests(6, seed=4, min_confidence=0.99):
+        eng.submit(r)
+    first = {r.uid: r for r in eng.run()}
+    for r in _requests(6, seed=4, min_confidence=0.99):
+        eng.submit(r)
+    second = {r.uid: r for r in eng.run()}
+    assert eng.stats.cache_hits == 6
+    for uid, res in second.items():
+        assert res.cached and not first[uid].cached
+        assert res.expert == first[uid].expert
+        assert res.cascade_depth == first[uid].cascade_depth
+        assert res.confidence == first[uid].confidence
+
+
+# --------------------------------------------------------- engine layer
+
+
+def test_high_threshold_escalates_to_larger_experts(tiny_library,
+                                                    router_params):
+    """With a strong size flag everything routes small; an unmeetable
+    confidence floor must climb the ladder instead, bounded by depth."""
+    _, rp_unc = router_params
+    sizes = {e.name: e.n_params for e in tiny_library.experts}
+    clock = Clock()
+    base = _engine(tiny_library, rp_unc, clock)
+    for r in _requests(8, seed=2):
+        r.lambdas = {"size": 50.0}
+        base.submit(r)
+    single = base.run()
+    assert all(r.expert == "small" for r in single)
+
+    # confidence is strictly below 1, so a threshold of 1.0 always abstains
+    casc = _engine(tiny_library, rp_unc, clock, cascade_max_depth=1)
+    for r in _requests(8, seed=2, min_confidence=1.0):
+        r.lambdas = {"size": 50.0}
+        casc.submit(r)
+    out = casc.run()
+    assert all(r.cascade_depth == 1 for r in out)      # bounded by max depth
+    assert all(sizes[r.expert] > sizes["small"] for r in out)
+    assert casc.stats.escalations == 8
+    assert dict(casc.stats.cascade_depth_hist) == {1: 8}
+    assert 1 in casc.stats.tier_latency_percentiles()
+
+
+def test_escalation_rides_escalation_lanes_in_serve(tiny_library,
+                                                    router_params):
+    _, rp_unc = router_params
+    clock = Clock()
+    eng = _engine(tiny_library, rp_unc, clock, max_wait_s=1e9,
+                  lane_target=4, cascade_max_depth=2)
+    reqs = _requests(9, seed=5, min_confidence=1.0)
+    for r in reqs:
+        r.lambdas = {"size": 50.0}          # first pick is always "small"
+    results = list(eng.serve(iter(reqs)))
+    assert sorted(r.uid for r in results) == list(range(9))
+    assert eng.stats.escalations == 9
+    # router-preferred escalation may reach the ladder top in one jump
+    assert all(1 <= r.cascade_depth <= 2 for r in results)
+    assert any(name.endswith("@esc") for name in eng.stats.lane_peaks)
+    summary = eng.stats.summary()["cascade"]
+    assert summary["escalations"] == 9
+    assert sum(summary["depth_hist"].values()) == 9
+
+
+# ------------------------------------------------- single-shot parity
+
+
+def _result_key(r):
+    d = dataclasses.asdict(r)
+    d["pred_losses"] = d["pred_losses"].tobytes()
+    d["predictions"] = d["predictions"].tobytes()
+    return d
+
+
+@pytest.mark.parametrize("discipline", ["run", "serve"])
+def test_min_confidence_zero_matches_pre_cascade_engine(
+        tiny_library, router_params, discipline):
+    """min_confidence=0 is the PR 2 engine, bit-for-bit: identical
+    choices, Results and EngineStats whether the router has an
+    uncertainty head or not."""
+    rp, rp_unc = router_params
+    outs, stats = [], []
+    for params in (rp, rp_unc):
+        clock = Clock()
+        eng = _engine(tiny_library, params, clock, lane_target=4,
+                      max_wait_s=1e9)
+        reqs = _requests(21, seed=7)
+        if discipline == "run":
+            for r in reqs:
+                eng.submit(r)
+            out = eng.run()
+        else:
+            out = list(eng.serve(iter(reqs)))
+        outs.append(sorted(out, key=lambda r: r.uid))
+        stats.append(eng.stats.summary())
+    for a, b in zip(*outs):
+        assert _result_key(a) == _result_key(b)
+        assert a.cascade_depth == 0 and a.confidence == 1.0
+    assert stats[0] == stats[1]
+    assert stats[0]["cascade"]["escalations"] == 0
+    assert stats[0]["cascade"]["depth_hist"] == {0: 21}

@@ -1,8 +1,9 @@
-import numpy as np
-import pytest
+"""Synthetic-corpus invariants; the property-based MLM test skips when
+hypothesis is absent (see ``hyputil``), the rest always run."""
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+import numpy as np
+
+from hyputil import given, settings, st
 
 from repro.data.batching import BatchIterator, mlm_batch
 from repro.data.corpus import DOMAINS, DomainCorpus

@@ -1,0 +1,64 @@
+"""End-to-end smoke test of the full experiment pipeline
+(``repro.core.experiment.run_experiment``) at an ultra-reduced scale.
+
+Exercises the whole paper loop — 11-expert library training, Q-table
+construction, router training, every evaluation (selection accuracy,
+allocation, silhouette, Pareto sweep) — structurally: shapes, ranges and
+bookkeeping, not quality (2 training steps are noise).  Marked ``slow``
+(~2-4 min on CPU); the CI coverage job runs it explicitly because it is
+the only test that reaches the experiment driver itself.
+"""
+
+import numpy as np
+import pytest
+
+from repro.data.corpus import DOMAINS
+
+pytestmark = pytest.mark.slow
+
+
+@pytest.fixture(scope="module")
+def reduced_results():
+    from repro.core import experiment as ex
+    xc = ex.ExperimentConfig(vocab=256, seq=32, expert_steps=2,
+                             n_train_prompts=48, n_val_prompts=16,
+                             n_test_per_domain=3, router_epochs=1)
+    return ex.run_experiment(xc, verbose=False, save=False)
+
+
+def test_experiment_reports_every_paper_quantity(reduced_results):
+    res = reduced_results
+    for key in ("router_eps", "selection_accuracy", "aggregate_accuracy",
+                "per_domain", "allocation", "silhouette", "pareto",
+                "library", "config"):
+        assert key in res, key
+
+
+def test_experiment_library_and_allocation_shapes(reduced_results):
+    res = reduced_results
+    assert len(res["library"]) == 11
+    assert all(e["n_params"] > 0 for e in res["library"])
+    alloc = np.array(res["allocation"])
+    assert alloc.shape == (len(DOMAINS), 11)
+    np.testing.assert_allclose(alloc.sum(axis=1), 1.0, atol=1e-6)
+
+
+def test_experiment_metrics_in_range(reduced_results):
+    res = reduced_results
+    assert np.isfinite(res["router_eps"]) and res["router_eps"] >= 0
+    for table in (res["selection_accuracy"], res["aggregate_accuracy"]):
+        assert set(table) >= {"tryage", "oracle", "random", "largest"}
+        assert all(0.0 <= v <= 1.0 for v in table.values())
+    # the loss-oracle upper-bounds nothing in accuracy terms, but
+    # selection accuracy of the oracle against itself is 1 by definition
+    assert res["selection_accuracy"]["oracle"] == 1.0
+    for d, row in res["per_domain"].items():
+        assert d in DOMAINS
+        assert all(0.0 <= v <= 1.0 for v in row.values())
+
+
+def test_experiment_pareto_rows_monotone(reduced_results):
+    rows = reduced_results["pareto"]["rows"]
+    assert rows[0]["lam"] == 0.0
+    sizes = [r["mean_size"] for r in rows]
+    assert all(s2 <= s1 + 1e-6 for s1, s2 in zip(sizes, sizes[1:]))

@@ -1,11 +1,10 @@
 """Routing-objective invariants — including hypothesis property tests on
-the system's core math (eq. 1/4)."""
+the system's core math (eq. 1/4).  Deterministic tests run everywhere;
+only the property-based tests skip when hypothesis is absent."""
 
 import numpy as np
-import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hyputil import given, settings, st
 
 from repro.core.library import ExpertSpec, ModelLibrary, _enc
 from repro.core.objective import (Constraint, route, routing_scores,

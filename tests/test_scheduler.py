@@ -1,5 +1,7 @@
 """Continuous-batching scheduler edge cases: deadline flushes, priority
-ordering, decision-cache parity, drain-on-shutdown, true latency.
+ordering, decision-cache parity, drain-on-shutdown, true latency —
+plus hypothesis property tests (random op streams) for the scheduler's
+exactly-once/ordering guarantees and the LRU cache vs a dict oracle.
 
 Pure-scheduler tests need no models; engine-level tests run the tiny
 3-expert library with an injectable fake clock so deadlines and
@@ -9,6 +11,8 @@ latencies are deterministic.
 import jax
 import numpy as np
 import pytest
+
+from hyputil import given, settings, st
 
 from repro.core.objective import recency_constraint, size_constraint
 from repro.core.router import RouterConfig, init_router
@@ -242,3 +246,154 @@ def test_latency_is_enqueue_to_flush(tiny_library):
     p = eng.stats.latency_percentiles()
     assert p["p50_s"] == pytest.approx(2.5)
     assert p["p95_s"] == pytest.approx(2.5)
+
+
+# --------------------------------------------- property tests (hypothesis)
+
+
+# an op stream: ("push", lane, priority) interleaved with "flush" ticks
+_ops = st.lists(
+    st.one_of(st.tuples(st.just("push"), st.integers(0, 2),
+                        st.integers(0, 3)),
+              st.just("flush")),
+    min_size=1, max_size=48)
+
+
+@given(ops=_ops, target=st.integers(1, 6))
+@settings(max_examples=60, deadline=None)
+def test_flushes_never_reorder_same_priority(ops, target):
+    """Across any interleaving of pushes and flush ticks, requests of
+    equal priority leave their lane in admission order (seq strictly
+    increasing per (lane, priority)), and nothing is lost or duplicated."""
+    sched = ExpertScheduler(n_experts=3, target=target, max_wait_s=1e9)
+    pushed, emitted = [], []
+    uid = 0
+    for op in ops:
+        if op == "flush":
+            for mi, entries, _ in sched.pop_ready(now=1.0):
+                emitted.extend((mi, e) for e in entries)
+        else:
+            _, lane, prio = op
+            sched.push(lane, _req(uid, priority=prio, arrival=1.0),
+                       np.zeros(3))
+            pushed.append(uid)
+            uid += 1
+    for mi, entries, _ in sched.drain():
+        emitted.extend((mi, e) for e in entries)
+    # exactly once
+    assert sorted(e.req.uid for _, e in emitted) == sorted(pushed)
+    assert sched.pending == 0
+    # same-priority admission order preserved per lane
+    seen: dict = {}
+    for mi, e in emitted:
+        key = (mi, e.req.priority)
+        assert seen.get(key, -1) < e.seq, (key, e.seq)
+        seen[key] = e.seq
+
+
+@given(ops=_ops, target=st.integers(1, 4), esc=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_escalation_lanes_share_exactly_once_guarantee(ops, target, esc):
+    """Pushing the same stream through escalation lanes (depth > 0) must
+    preserve the exactly-once guarantee and keep tiers separate."""
+    sched = ExpertScheduler(n_experts=3, target=target, max_wait_s=1e9)
+    pushed, emitted = [], []
+    uid = 0
+    for op in ops:
+        if op == "flush":
+            emitted += [e for _, ents, _ in sched.pop_ready(now=1.0)
+                        for e in ents]
+        else:
+            _, lane, prio = op
+            depth = 1 if esc else 0
+            sched.push(lane, _req(uid, priority=prio, arrival=1.0),
+                       np.zeros(3), depth=depth)
+            pushed.append(uid)
+            uid += 1
+    emitted += [e for _, ents, _ in sched.drain() for e in ents]
+    assert sorted(e.req.uid for e in emitted) == sorted(pushed)
+    assert all(e.depth == (1 if esc else 0) for e in emitted)
+    if esc and pushed:
+        assert sched.esc_peaks() and not sched.peaks()
+
+
+class _LRUOracle:
+    """Dict/list-based LRU reference: MRU at the end of a plain list."""
+
+    def __init__(self, capacity):
+        self.capacity = capacity
+        self.items = []                      # list of (key, value)
+
+    def get(self, key):
+        for i, (k, v) in enumerate(self.items):
+            if k == key:
+                self.items.append(self.items.pop(i))
+                return v
+        return None
+
+    def put(self, key, value):
+        for i, (k, _) in enumerate(self.items):
+            if k == key:
+                self.items.pop(i)
+                break
+        self.items.append((key, value))
+        while len(self.items) > self.capacity:
+            self.items.pop(0)
+
+
+_cache_ops = st.lists(
+    st.tuples(st.sampled_from(["get", "put"]), st.integers(0, 5)),
+    min_size=1, max_size=60)
+
+
+@given(ops=_cache_ops, capacity=st.integers(1, 4))
+@settings(max_examples=60, deadline=None)
+def test_lru_cache_matches_dict_oracle(ops, capacity):
+    """DecisionCache hit/miss and eviction behaviour must match a naive
+    list-based LRU oracle under arbitrary get/put interleavings."""
+    cache = DecisionCache(capacity=capacity)
+    oracle = _LRUOracle(capacity)
+    for i, (op, k) in enumerate(ops):
+        key = ("k", k)
+        if op == "get":
+            hit = cache.get(key)
+            expect = oracle.get(key)
+            if expect is None:
+                assert hit is None
+            else:
+                assert hit is not None and hit[1] == expect
+        else:
+            cache.put(key, np.full(1, i, np.float32), i)
+            oracle.put(key, i)
+        assert len(cache) == len(oracle.items) <= capacity
+    # final state: same keys survive, same recency order under eviction
+    for k, v in oracle.items:
+        hit = cache.get(k)
+        assert hit is not None and hit[1] == v
+
+
+@given(uids=st.lists(st.integers(0, 7), min_size=1, max_size=24),
+       thresholds=st.lists(st.sampled_from([0.0, 0.5, 0.9]),
+                           min_size=1, max_size=3))
+@settings(max_examples=15, deadline=None)
+def test_serve_emits_every_admitted_request_once(tiny_library, uids,
+                                                 thresholds):
+    """Engine-level exactly-once: random arrival streams (with idle
+    ticks, repeated prompts, mixed flags and cascade thresholds) must
+    come back out of serve() exactly once each."""
+    clock = Clock()
+    eng = _engine(tiny_library, clock, lane_target=4, max_wait_s=1.0)
+    mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
+
+    def stream():
+        for i, u in enumerate(uids):
+            rng = np.random.default_rng(u)      # repeated prompts cache-hit
+            yield Request(
+                uid=i, tokens=rng.integers(4, 64, 32).astype(np.int32),
+                lambdas=mix[u % len(mix)],
+                min_confidence=thresholds[i % len(thresholds)])
+            if u % 3 == 0:
+                clock.advance(0.7)              # age toward deadline
+                yield None
+    results = list(eng.serve(stream()))
+    assert sorted(r.uid for r in results) == list(range(len(uids)))

@@ -1,11 +1,13 @@
-"""Serving-engine invariants (incl. hypothesis property tests)."""
+"""Serving-engine invariants (incl. hypothesis property tests).
+
+Deterministic tests run everywhere; only the property-based tests skip
+when hypothesis is absent (see ``hyputil``)."""
 
 import jax
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hyputil import given, settings, st
 
 from repro.core.objective import recency_constraint, size_constraint
 from repro.core.router import RouterConfig, init_router

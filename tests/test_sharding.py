@@ -1,11 +1,12 @@
-"""Sharding-rule properties (hypothesis) + mesh/spec construction."""
+"""Sharding-rule properties (hypothesis) + mesh/spec construction.
+Deterministic tests run everywhere; only the property-based tests skip
+when hypothesis is absent."""
 
 import jax
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hyputil import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.sharding import DEFAULT_RULES, logical_to_spec

@@ -1,5 +1,9 @@
 """End-to-end behaviour tests for the Tryage system (integration scale:
-small models, real training, real routing)."""
+small models, real training, real routing).
+
+Marked ``slow`` as a module: the shared fixture trains a 3-expert
+library plus router (~3 min on CPU).  The fast loop (`-m "not slow"`)
+skips it; the CI coverage job runs it explicitly."""
 
 import jax
 import numpy as np
@@ -11,6 +15,8 @@ from repro.core.router import RouterConfig, init_router, predict_losses
 from repro.core.training import train_library, train_router
 from repro.core.experiment import _eval_batches
 from repro.data.corpus import DOMAINS
+
+pytestmark = pytest.mark.slow
 
 
 @pytest.fixture(scope="module")
