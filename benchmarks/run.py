@@ -18,6 +18,16 @@ experiment is run automatically.
   scheduler continuous-batching vs FIFO-drain throughput + padded rows
   cascade   accuracy-vs-mean-size front: confidence-aware cascade
             routing vs single-shot routing (+ escalation telemetry)
+  drift     online router adaptation under a mid-stream shift: the
+            adapting engine must recover >= half of the routing-accuracy
+            drop that leaves the frozen engine degraded (per-window
+            timeline written to experiments/tryage/drift_timeline.csv)
+
+Benchmarks whose gates depend on artifact quality (``cascade``,
+``drift``) fail fast with a regeneration hint when the cached
+experiments/tryage artifacts were generated below the fast config
+(expert_steps < 60) — an ultra-reduced library gives near-random
+accuracy and the gates are meaningless there.
 
 Select a subset with ``--only kernels,scheduler``; ``--out bench.csv``
 additionally writes the CSV to a file (CI uploads it as an artifact);
@@ -51,6 +61,26 @@ def _results(fast: bool = False):
                                      n_val_prompts=192, n_test_per_domain=48,
                                      router_epochs=5)
         return ex.run_experiment(xc, verbose=False)
+
+
+# quality floor for artifact-gated benchmarks: the fast experiment
+# config.  Below this the experts are near-random, the router's Q-table
+# supervision is noise, and the cascade/drift gates fail for reasons
+# that have nothing to do with the code under test.
+MIN_EXPERT_STEPS = 60
+
+
+def _require_artifact_quality(res, bench_name):
+    """Fail fast (with a regeneration hint) when the cached artifacts
+    were generated below the fast config."""
+    steps = (res or {}).get("config", {}).get("expert_steps", 0)
+    if steps < MIN_EXPERT_STEPS:
+        raise RuntimeError(
+            f"{bench_name}: experiments/tryage artifacts were generated "
+            f"with expert_steps={steps} < {MIN_EXPERT_STEPS} (below the "
+            f"fast config) — the gate is meaningless at that quality. "
+            f"Regenerate with: PYTHONPATH=src python -m "
+            f"repro.core.experiment --fast  (~35 min on CPU)")
 
 
 def bench_fig2(res):
@@ -356,6 +386,7 @@ def bench_cascade(res):
     from repro.core.training import calibrate_uncertainty
     from repro.data.batching import mlm_batch
     from repro.serving import Request, TryageEngine
+    _require_artifact_quality(res, "cascade")
     art = ex.load_artifacts()
     lib, rp, rc, corpus = (art["library"], art["router_params"], art["rc"],
                            art["corpus"])
@@ -447,6 +478,190 @@ def bench_cascade(res):
             "cascade front does not dominate any single-shot point")
 
 
+def bench_drift(res):
+    """Online router adaptation under a mid-stream shift.
+
+    Scenario (the paper's motivating failure mode: downstream expert
+    performance drifts while the router's knowledge goes stale):
+
+      1. *Pre-shift*: traffic samples the uniform domain mix; every
+         expert behaves as it did when the router was trained.
+      2. *Shift*: the traffic mix concentrates on the home domains of
+         the router's favourite expert E, and — simultaneously — E's
+         deployment regresses (its weights are replaced by a fresh
+         init, a stale/bad rollout).  The frozen router keeps routing
+         that traffic to E on stale predictions.
+      3. *Post-shift*: a frozen engine and an adapting engine
+         (``adapt_every=8``, head-only incremental updates on execution
+         feedback) serve identical request streams; routing accuracy is
+         measured per 32-request window against the *current* ground
+         truth (E's true losses recomputed after the regression).
+
+    Routing accuracy is the repo's tolerant selection accuracy (picked
+    expert within 0.5 nats of the per-prompt optimum — exact-argmin
+    matching is noise at this scale, see ``core.baselines``).  Gates:
+    the frozen engine must stay degraded after the shift, the adapting
+    engine must recover at least half of the drop, and every router
+    update must have bumped the version.  The per-window timeline is
+    written to ``experiments/tryage/drift_timeline.csv`` (CI uploads
+    it next to the benchmark CSV).
+    """
+    import jax
+    from repro.core import experiment as ex
+    from repro.core.experiment import _eval_batches
+    from repro.core.qtable import _per_prompt_metrics_jit
+    from repro.data.corpus import DOMAINS
+    from repro.models.model import init_model
+    from repro.serving import Request, TryageEngine
+
+    import jax.numpy as jnp
+
+    _require_artifact_quality(res, "drift")
+    art = ex.load_artifacts()
+    lib, rp, rc, corpus = (art["library"], art["router_params"], art["rc"],
+                           art["corpus"])
+    cfg = res["config"]
+
+    # rebuild the held-out eval batches (deterministic seeds) so the
+    # workload carries targets/mask for execution feedback; they must
+    # line up with the cached Q-table's rows
+    test_b = []
+    for di, d in enumerate(DOMAINS):
+        test_b += _eval_batches(corpus, {d: 1.0}, cfg["n_test_per_domain"],
+                                cfg["seq"], cfg["seed"] + 303 + di)
+    cat = lambda k: np.concatenate([b[k] for b in test_b])
+    tokens, targets, mask, domain = (cat("tokens"), cat("targets"),
+                                     cat("mask"), cat("domain"))
+    if tokens.shape != art["test_tokens"].shape or \
+            not (tokens == art["test_tokens"]).all():
+        raise RuntimeError(
+            "drift: rebuilt eval batches do not match cached test_tokens "
+            "(artifacts.pkl and results.json are from different runs?) — "
+            "regenerate the artifacts")
+    q_pre = art["q_test"]["loss"]                       # (N, M) truth
+    pred = art["pred"]                                  # router L-hat
+
+    TOL = 0.5          # "routed well" = within 0.5 nats of the optimum
+    names = [e.name for e in lib.experts]
+    name2idx = {n: i for i, n in enumerate(names)}
+    choice0 = pred.argmin(1)
+    E = int(np.bincount(choice0, minlength=len(lib)).argmax())
+    # shift domains: where the favourite expert is both routed to and
+    # genuinely near-optimal pre-drift, so pre-drift routing of the
+    # shifted traffic was *good* and the post-drift drop is real
+    good_E = (choice0 == E) & (q_pre[:, E] <= q_pre.min(1) + TOL)
+    dom_counts = np.array([(good_E & (domain == di)).sum()
+                           for di in range(len(DOMAINS))])
+    D = sorted(np.argsort(dom_counts)[::-1][:2].tolist())
+    pool_pre = np.arange(len(tokens))
+    pool_post = np.where(np.isin(domain, D))[0]
+
+    # the regression: E's deployment rolls back to a fresh init; its
+    # true per-prompt losses are recomputed for the post-shift truth
+    orig_params = lib.experts[E].params
+    bad_params, _ = init_model(jax.random.PRNGKey(4321), lib.experts[E].cfg)
+    newloss = []
+    for b in test_b:
+        jb = {k: jnp.asarray(v) for k, v in b.items() if k != "domain"}
+        l, _ = _per_prompt_metrics_jit(bad_params, lib.experts[E].cfg, jb)
+        newloss.append(np.asarray(l))
+    q_post = q_pre.copy()
+    q_post[:, E] = np.concatenate(newloss)
+
+    W, n_pre, n_post = 32, 96, 288
+
+    def tolacc(choices, idx, L):
+        picked = L[idx, choices]
+        return float((picked <= L[idx].min(1) + TOL).mean())
+
+    def timeline(adapt: bool):
+        """Serve the two-phase stream; returns (pre_accs, post_accs,
+        post window choices+indices, engine)."""
+        rng = np.random.default_rng(0)
+        eng = TryageEngine(
+            lib, rp, rc, [], max_batch=32,
+            adapt_every=8 if adapt else 0, adapt_lr=0.1,
+            adapt_trainable="head", adapt_batch=32, replay_cap=128)
+        uid = 0
+
+        def window(pool, L):
+            nonlocal uid
+            idx = rng.choice(pool, size=W, replace=len(pool) < W)
+            for i in idx:
+                eng.submit(Request(uid=uid, tokens=tokens[i],
+                                   targets=targets[i], mask=mask[i]))
+                uid += 1
+            out = sorted(eng.run(), key=lambda r: r.uid)
+            ch = np.array([name2idx[r.expert] for r in out])
+            return tolacc(ch, idx, L), ch, idx
+
+        try:
+            lib.experts[E].params = orig_params
+            pre = [window(pool_pre, q_pre)[0] for _ in range(n_pre // W)]
+            lib.experts[E].params = bad_params
+            post, post_ch = [], []
+            for _ in range(n_post // W):
+                acc, ch, idx = window(pool_post, q_post)
+                post.append(acc)
+                post_ch.append((ch, idx))
+            return pre, post, post_ch, eng
+        finally:
+            lib.experts[E].params = orig_params
+
+    pre_f, post_f, post_ch_f, frozen = timeline(adapt=False)
+    pre_a, post_a, _, adapting = timeline(adapt=True)
+
+    # what the frozen router's post-shift choices were worth *before*
+    # the drift: the pre-drift accuracy of the shifted traffic, i.e.
+    # the level the drop is measured from
+    before = float(np.mean([tolacc(ch, idx, q_pre)
+                            for ch, idx in post_ch_f]))
+    frozen_post = float(np.mean(post_f))
+    adapted_post = float(np.mean(post_a[-3:]))          # recovered level
+    drop = before - frozen_post
+    recovered = ((adapted_post - frozen_post) / drop) if drop > 0 else 0.0
+    stats = adapting.stats.summary()["adaptation"]
+
+    os.makedirs(ex.ART_DIR, exist_ok=True)
+    csv_path = os.path.normpath(
+        os.path.join(ex.ART_DIR, "drift_timeline.csv"))
+    with open(csv_path, "w") as f:
+        f.write("phase,window,frozen_acc,adapted_acc\n")
+        for w, (af, aa) in enumerate(zip(pre_f, pre_a)):
+            f.write(f"pre,{w},{af:.6g},{aa:.6g}\n")
+        for w, (af, aa) in enumerate(zip(post_f, post_a)):
+            f.write(f"post,{w},{af:.6g},{aa:.6g}\n")
+
+    rows = [
+        ("drift/regressed_expert", float(E), names[E]),
+        ("drift/shift_domains", float(len(D)),
+         ";".join(DOMAINS[d] for d in D)),
+        ("drift/before_acc", before,
+         "frozen post-shift choices vs pre-drift truth"),
+        ("drift/frozen_post_acc", frozen_post, "must stay degraded"),
+        ("drift/adapted_post_acc", adapted_post, "mean of last 3 windows"),
+        ("drift/recovered_frac", recovered, "must be >= 0.5"),
+        ("drift/updates", float(stats["updates"]), ""),
+        ("drift/router_version", float(stats["router_version"]),
+         "one bump per update"),
+        ("drift/feedback_events", float(stats["feedback_events"]), ""),
+        ("drift/timeline_csv", 1.0, csv_path),
+    ]
+    for row in rows:
+        yield row
+    if stats["updates"] < 1 or stats["router_version"] != stats["updates"]:
+        raise RuntimeError("drift: adaptation applied no updates (or "
+                           "versions out of step with updates)")
+    if frozen_post > before - 0.2:
+        raise RuntimeError(
+            f"drift: frozen router did not degrade (before={before:.3f}, "
+            f"frozen_post={frozen_post:.3f}) — shift scenario is broken")
+    if recovered < 0.5:
+        raise RuntimeError(
+            f"drift: adapting router recovered only {recovered:.2f} of "
+            f"the accuracy drop (need >= 0.5)")
+
+
 # (name, fn, needs_experiment_artifacts)
 BENCHES = [
     ("fig2", bench_fig2, True),
@@ -462,6 +677,7 @@ BENCHES = [
     ("serving", bench_serving, True),
     ("scheduler", bench_scheduler, True),
     ("cascade", bench_cascade, True),
+    ("drift", bench_drift, True),
 ]
 
 

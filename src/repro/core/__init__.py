@@ -4,16 +4,18 @@ predicts per-prompt expert losses and routes under constraint objectives."""
 from repro.core.library import ExpertSpec, ModelLibrary, paper_library_specs
 from repro.core.objective import (Constraint, size_constraint,
                                   recency_constraint, routing_scores, route)
-from repro.core.router import (RouterConfig, init_router, predict_losses,
-                               router_embed)
+from repro.core.router import (RouterConfig, VersionedParams, init_router,
+                               predict_losses, router_embed)
 from repro.core.qtable import build_q_table, mlm_accuracy
-from repro.core.training import TrainLog, train_router
+from repro.core.training import (TrainLog, make_router_update_step,
+                                 router_prediction_error, train_router)
 from repro.core.pareto import pareto_sweep
 
 __all__ = [
     "ExpertSpec", "ModelLibrary", "paper_library_specs", "Constraint",
     "size_constraint", "recency_constraint", "routing_scores", "route",
-    "RouterConfig", "init_router", "predict_losses", "router_embed",
-    "build_q_table", "mlm_accuracy", "TrainLog", "train_router",
+    "RouterConfig", "VersionedParams", "init_router", "predict_losses",
+    "router_embed", "build_q_table", "mlm_accuracy", "TrainLog",
+    "make_router_update_step", "router_prediction_error", "train_router",
     "pareto_sweep",
 ]

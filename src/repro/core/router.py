@@ -17,6 +17,19 @@ calibrated confidence score in ``core.objective`` and the serving
 engine's escalation rule.  Checkpoints trained before this head exists
 keep working: every consumer falls back to a constant prior
 (``sigma = 1``) when ``params`` has no ``"unc"`` entry.
+
+Online adaptation: a serving engine that continually refreshes the
+router (``core.training.make_router_update_step`` over replayed
+feedback)
+must never let a half-updated parameter tree reach an in-flight scoring
+call, and must be able to tell *which* parameter snapshot produced any
+memoised decision.  ``VersionedParams`` is that contract: an immutable
+(params, version) pair whose ``swap`` returns a new snapshot with a
+monotonically increasing version.  Scoring functions take the params
+tree as an argument, so publishing an update is a single reference
+assignment — readers see either the old complete tree or the new one —
+and the version is threaded into the decision-cache key so verdicts
+scored by a superseded router can never be served again.
 """
 
 from __future__ import annotations
@@ -52,6 +65,27 @@ class RouterConfig:
             layer_pattern=("attn",), moe_pattern=(False,),
             is_encoder=True, tie_embeddings=True, norm_kind="layernorm",
             act="gelu", dtype="float32")
+
+
+@dataclasses.dataclass(frozen=True)
+class VersionedParams:
+    """Immutable router-parameter snapshot with a monotone version.
+
+    The serving engine scores against ``params`` by value (jit arguments,
+    not captured state), so an online update is published atomically by
+    replacing the whole snapshot: ``swap`` never mutates, it returns a
+    fresh snapshot with ``version + 1``.  The version participates in
+    the router-decision cache key (``serving.cache.DecisionCache.key``):
+    bumping it makes every verdict scored by the previous parameters
+    unreachable, which is exactly the invalidation the adaptation loop
+    needs."""
+
+    params: dict
+    version: int = 0
+
+    def swap(self, new_params: dict) -> "VersionedParams":
+        """Publish ``new_params`` as the next snapshot (version + 1)."""
+        return VersionedParams(new_params, self.version + 1)
 
 
 # softplus floor on predicted residuals: keeps sigma > 0 so confidence

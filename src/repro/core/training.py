@@ -1,9 +1,16 @@
-"""Router training (paper eq. 2/3) and expert pre-training.
+"""Router training (paper eq. 2/3), expert pre-training, and the online
+adaptation step that keeps a deployed router tracking expert drift.
 
 Paper recipe, reproduced: ADAM, weight decay 1e-5, lr 5e-5 with
 exponential decay 0.9, inputs curtailed to a fixed token budget, early
 stopping with patience conditioned on validation loss measured 4x per
 epoch, checkpointing of the best validation model.
+
+Online adaptation (``make_router_update_step``): the paper's router
+"continually tracks downstream expert performance"; serving feedback
+(observed masked NLL of the chosen expert, ``serving.feedback``) is
+replayed through a jit'd incremental SGD/EMA step on shadow weights,
+published atomically via ``core.router.VersionedParams.swap``.
 """
 
 from __future__ import annotations
@@ -158,6 +165,83 @@ def calibrate_uncertainty(router_params, rc: RouterConfig, tokens,
     out = dict(router_params)
     out["unc"] = unc
     return out
+
+
+# ------------------------------------------------- online adaptation
+
+def router_prediction_error(params, rc: RouterConfig, toks, expert_idx,
+                            observed):
+    """Mean |L-hat[chosen] - L_observed| over a feedback batch — the
+    adaptation loop's before/after health metric (jit-friendly)."""
+    pred = predict_losses(params, rc, {"tokens": toks})
+    sel = jnp.take_along_axis(
+        pred, jnp.asarray(expert_idx, jnp.int32)[:, None], axis=1)[:, 0]
+    return jnp.mean(jnp.abs(sel - jnp.asarray(observed, jnp.float32)))
+
+
+def make_router_update_step(rc: RouterConfig, *, lr: float = 1e-2,
+                            ema: float = 0.0, trainable: str = "all"):
+    """Build the jit'd incremental update for online router adaptation.
+
+    The returned ``step(params, toks, expert_idx, observed)`` performs
+    one SGD step on the *bandit* regression loss
+
+        mean_i (L-hat(z_i)[a_i] - L_obs(z_i, a_i))^2
+
+    where ``a_i`` is the expert that actually served prompt ``z_i`` and
+    ``L_obs`` its measured masked NLL (``serving.feedback``) — only the
+    chosen expert's prediction is supervised, exactly the signal live
+    traffic provides.  It returns ``(new_params, loss)``; the input tree
+    is never mutated (shadow weights): the caller publishes the result
+    atomically via ``core.router.VersionedParams.swap``.
+
+    ``ema`` in [0, 1) blends the step back toward the current weights
+    (``new = ema * old + (1 - ema) * sgd``) — a trust region that damps
+    noisy single-batch gradients; 0 is plain SGD.  ``trainable`` picks
+    the update scope: ``"all"`` adapts encoder + loss head, ``"head"``
+    freezes the encoder and adapts the loss head only (cheaper and far
+    less able to distort off-distribution predictions — the default
+    serving choice).  The uncertainty head, if present, is never
+    touched: sigma stays calibrated to the *training-time* residual
+    scale and escalation behaviour remains stable under adaptation.
+    """
+    assert 0.0 <= ema < 1.0 and trainable in ("all", "head")
+
+    def _sgd(p, g):
+        new = jax.tree.map(lambda w, gw: w - lr * gw, p, g)
+        if ema:
+            new = jax.tree.map(lambda w, nw: ema * w + (1.0 - ema) * nw,
+                               p, new)
+        return new
+
+    @jax.jit
+    def step(params, toks, expert_idx, observed):
+        observed = jnp.asarray(observed, jnp.float32)
+        idx = jnp.asarray(expert_idx, jnp.int32)[:, None]
+
+        def bandit_loss(p):
+            pred = predict_losses(p, rc, {"tokens": toks})
+            sel = jnp.take_along_axis(pred, idx, axis=1)[:, 0]
+            return jnp.mean(jnp.square(sel - observed))
+
+        if trainable == "head":
+            def head_loss(head):
+                return bandit_loss({**params, "head": head})
+
+            l, g = jax.value_and_grad(head_loss)(params["head"])
+            return {**params, "head": _sgd(params["head"], g)}, l
+
+        frozen = {k: v for k, v in params.items()
+                  if k not in ("encoder", "head")}
+
+        def live_loss(live):
+            return bandit_loss({**frozen, **live})
+
+        live = {"encoder": params["encoder"], "head": params["head"]}
+        l, g = jax.value_and_grad(live_loss)(live)
+        return {**frozen, **_sgd(live, g)}, l
+
+    return step
 
 
 def train_router(router_params, rc: RouterConfig, train_data, val_data, *,

@@ -4,7 +4,9 @@ drive the streaming API with a Poisson arrival simulator.
   PYTHONPATH=src python -m repro.launch.serve --requests 256 [--fast] \
       [--use-kernel] [--no-buckets] [--fifo] [--arrival-rate 200] \
       [--max-wait-s 0.05] [--priority-mix 0.9,0.08,0.02] \
-      [--cascade 0.6] [--cascade-depth 2]
+      [--cascade 0.6] [--cascade-depth 2] \
+      [--adapt-every 16 --adapt-lr 0.05 --replay-cap 1024] \
+      [--drift-after 128 --drift-domains github,dm_math]
 
 By default requests flow through ``TryageEngine.serve`` — the
 continuous-batching scheduler that coalesces same-expert requests
@@ -27,6 +29,16 @@ the next-larger expert via the scheduler's escalation lanes, up to
 --cascade-depth steps.  If the loaded router checkpoint predates the
 uncertainty head, one is calibrated on the fly against the cached
 held-out Q-table (a few seconds, head-only training).
+
+Online adaptation + drift: --adapt-every N turns on feedback-driven
+router refresh (one incremental update per N observed losses, replayed
+from a --replay-cap bounded buffer at --adapt-lr); the summary JSON
+reports updates applied, the final router version, and the pre/post
+update prediction error.  --drift-after R simulates a mid-stream
+domain shift: the first R requests are drawn from the uniform domain
+mix, everything after from a mix concentrated on --drift-domains —
+watch the adaptation telemetry track the shift (or freeze the router
+with --adapt-every 0 and watch it go stale).
 """
 
 from __future__ import annotations
@@ -97,7 +109,22 @@ def main():
                          "(0 = single-shot routing, the default)")
     ap.add_argument("--cascade-depth", type=int, default=2,
                     help="max escalation steps per request")
+    ap.add_argument("--adapt-every", type=int, default=0, metavar="N",
+                    help="router update every N observed losses "
+                         "(0 = frozen router, the default)")
+    ap.add_argument("--adapt-lr", type=float, default=0.05,
+                    help="learning rate of the incremental router update")
+    ap.add_argument("--replay-cap", type=int, default=1024,
+                    help="bounded feedback replay-buffer capacity")
+    ap.add_argument("--drift-after", type=int, default=0, metavar="R",
+                    help="switch the domain mix after R requests "
+                         "(0 = no drift, the default)")
+    ap.add_argument("--drift-domains", type=str, default="github,dm_math",
+                    help="comma list of domains the post-shift mix "
+                         "concentrates on")
     args = ap.parse_args()
+    if args.adapt_every > 0 and args.replay_cap <= 0:
+        ap.error("--adapt-every needs a replay buffer (--replay-cap >= 1)")
 
     from repro.core import experiment as ex
     from repro.core.objective import recency_constraint, size_constraint
@@ -129,11 +156,34 @@ def main():
                        lane_target=args.lane_target,
                        max_wait_s=args.max_wait_s,
                        decision_cache=not args.no_cache,
-                       cascade_max_depth=args.cascade_depth)
+                       cascade_max_depth=args.cascade_depth,
+                       adapt_every=args.adapt_every,
+                       adapt_lr=args.adapt_lr,
+                       replay_cap=args.replay_cap)
 
     rng = np.random.default_rng(0)
     uniform = {d: 1.0 / 8 for d in corpus.tables}
-    toks, doms = corpus.sample_mixture(uniform, args.requests, args.seq, rng)
+    # drift simulator: requests [0, drift_after) sample the uniform mix,
+    # the rest a mix concentrated on --drift-domains — a mid-stream
+    # domain shift the adaptation loop should track
+    n_pre = (min(args.drift_after, args.requests) if args.drift_after > 0
+             else args.requests)
+    if n_pre < args.requests:
+        shift_doms = [d.strip() for d in args.drift_domains.split(",")
+                      if d.strip()]
+        unknown = set(shift_doms) - set(corpus.tables)
+        if not shift_doms or unknown:
+            raise SystemExit(f"--drift-domains must name corpus domains "
+                             f"(unknown: {sorted(unknown)}; "
+                             f"have: {sorted(corpus.tables)})")
+        shifted = {d: 1.0 / len(shift_doms) for d in shift_doms}
+        t_pre, _ = corpus.sample_mixture(uniform, n_pre, args.seq, rng)
+        t_post, _ = corpus.sample_mixture(shifted, args.requests - n_pre,
+                                          args.seq, rng)
+        toks = np.concatenate([t_pre, t_post])
+    else:
+        toks, _ = corpus.sample_mixture(uniform, args.requests, args.seq,
+                                        rng)
     mb = mlm_batch(toks, rng, 0.15, corpus.vocab_size)
     flag_mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
     mix = parse_priority_mix(args.priority_mix)
@@ -160,6 +210,8 @@ def main():
         "router_path": "fused-kernel" if args.use_kernel else "host",
         "discipline": "fifo-drain" if args.fifo else "continuous-batching",
         "cascade_threshold": args.cascade,
+        "adapt_every": args.adapt_every,
+        "drift_after": args.drift_after,
         "arrival_rate": args.arrival_rate,
         "wall_s": round(dt, 2),
         "req_per_s": round(len(results) / dt, 1),

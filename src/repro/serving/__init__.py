@@ -1,9 +1,17 @@
 from repro.serving.cache import DecisionCache
 from repro.serving.engine import TryageEngine, EngineStats, bucket_size
+from repro.serving.feedback import ReplayBuffer
+from repro.serving.pipeline import (CascadeStage, ExecuteStage,
+                                    FeedbackStage, FlushContext,
+                                    RouteContext, RouteStage,
+                                    ServingPipeline)
 from repro.serving.requests import (Request, Result, lambda_matrix,
                                     parse_flags)
 from repro.serving.scheduler import ExpertScheduler, Lane, LaneEntry
 
 __all__ = ["TryageEngine", "EngineStats", "Request", "Result",
            "bucket_size", "lambda_matrix", "parse_flags", "DecisionCache",
-           "ExpertScheduler", "Lane", "LaneEntry"]
+           "ExpertScheduler", "Lane", "LaneEntry",
+           "ReplayBuffer", "ServingPipeline", "RouteContext",
+           "FlushContext", "RouteStage", "CascadeStage", "ExecuteStage",
+           "FeedbackStage"]

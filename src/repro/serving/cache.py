@@ -11,6 +11,14 @@ collisions, no approximate matching.
 Capacity-bounded LRU: reads refresh recency, inserts evict the least
 recently used entry.  Hit/miss telemetry lives in ``EngineStats``, not
 here — the engine is the only consumer.
+
+Online adaptation: once the engine refreshes the router mid-stream
+(``core.router.VersionedParams.swap``), every memoised verdict scored
+by the superseded parameters is stale.  The router *version* is part of
+the key, so stale entries become structurally unreachable the moment
+the version bumps — correctness does not depend on anyone remembering
+to flush.  The engine still calls ``clear()`` on a swap to reclaim the
+dead entries' memory immediately instead of waiting for LRU churn.
 """
 
 from __future__ import annotations
@@ -40,18 +48,29 @@ class DecisionCache:
         lambdas: dict,
         constraint_names: list,
         min_confidence: float = 0.0,
+        router_version: int = 0,
     ) -> tuple:
         """Exact cache key: token buffer bytes (plus dtype/shape, so
         equal byte strings from different layouts cannot collide) + the
         lambda vector laid out in engine constraint order (unknown
         constraint names are ignored, matching ``lambda_matrix``) + the
-        request's cascade threshold.  The threshold is part of the key
-        because the cached verdict is *post-cascade*: the same prompt at
-        a stricter threshold may legitimately escalate to a different
-        expert, and cached verdicts must stay exact."""
+        request's cascade threshold + the router version that scored the
+        entry.  The threshold is part of the key because the cached
+        verdict is *post-cascade*: the same prompt at a stricter
+        threshold may legitimately escalate to a different expert, and
+        cached verdicts must stay exact.  The version is part of the key
+        because online adaptation swaps the router parameters
+        mid-stream: a verdict scored by version ``v`` must never be
+        returned once version ``v + 1`` is live."""
         lam = tuple(float(lambdas.get(name, 0.0)) for name in constraint_names)
-        return (tokens.tobytes(), tokens.dtype.str, tokens.shape, lam,
-                float(min_confidence))
+        return (
+            tokens.tobytes(),
+            tokens.dtype.str,
+            tokens.shape,
+            lam,
+            float(min_confidence),
+            int(router_version),
+        )
 
     def get(self, key: tuple) -> tuple[np.ndarray, int, int, float] | None:
         entry = self._entries.get(key)
@@ -77,3 +96,9 @@ class DecisionCache:
         self._entries.move_to_end(key)
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
+
+    def clear(self) -> None:
+        """Drop every entry (memory reclaim after a router-version bump;
+        the version in the key already guarantees stale entries cannot
+        hit)."""
+        self._entries.clear()

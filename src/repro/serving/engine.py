@@ -1,13 +1,18 @@
-"""The Tryage serving engine: a two-stage pipeline of batched router
-scoring (the *routing stage*) and per-expert micro-batched execution
-(the *expert executor*).
+"""The Tryage serving engine: an explicit staged pipeline
+
+    Route -> Cascade -> Execute -> Feedback
+
+over a model library (stages in ``repro.serving.pipeline``).
 
 This is the production form of the paper's dispatch loop: requests are
 admitted, the perceptive router scores a whole admission batch in one
-forward pass, the routing objective (with per-request lambda weights
-from user flags) picks an expert per prompt, and prompts land in
-per-expert *lanes* owned by the scheduler.  Two executor disciplines
-exist on top of the same routing stage:
+forward pass (Route), the routing objective (with per-request lambda
+weights from user flags) picks an expert per prompt and the
+confidence cascade may escalate it (Cascade), and prompts land in
+per-expert *lanes* owned by the scheduler; lane flushes run the expert
+(Execute) and publish the observed loss back to the router's replay
+buffer (Feedback).  Two executor disciplines exist on top of the same
+routing stages:
 
   ``run()``    FIFO drain — every admission batch launches its per-expert
                groups immediately, however ragged.  Kept as the baseline
@@ -19,10 +24,11 @@ exist on top of the same routing stage:
                back as micro-batches complete.
 
 Routing decisions are memoised in an exact LRU cache keyed on
-``(token bytes, lambda vector, confidence threshold)``
+``(token bytes, lambda vector, confidence threshold, router version)``
 (``repro.serving.cache``), so repeated prompts skip the router forward
 pass entirely; a hit returns the identical (post-cascade) verdict the
-fresh score produced.
+fresh score produced, and a router-version bump makes every older
+verdict unreachable.
 
 Confidence-aware cascade: a request may carry ``min_confidence > 0``.
 After scoring, the router's per-expert uncertainty head (constant prior
@@ -35,6 +41,23 @@ telemetry (escalations, depth histogram, per-tier latency) lands in
 ``EngineStats``.  ``min_confidence = 0`` (the default) is single-shot:
 the sigma pass is skipped entirely and behaviour is identical to the
 pre-cascade engine.
+
+Online adaptation: the paper's router *continually tracks downstream
+expert performance*, so the engine can close the loop at serving time.
+Expert execution already measures the chosen expert's true masked NLL;
+the Feedback stage publishes those (prompt, expert, loss) samples onto
+a bounded replay buffer (``repro.serving.feedback``), and every
+``adapt_every`` samples the engine replays a batch through the jit'd
+incremental update built by ``core.training.make_router_update_step``
+on *shadow weights* — in-flight scoring keeps reading the complete old
+tree, and
+the refreshed parameters are published atomically via
+``core.router.VersionedParams.swap``.  Each swap bumps the router
+``version``, which is part of the decision-cache key, so verdicts
+scored by a superseded router are structurally unreachable (the cache
+is also cleared to reclaim their memory).  ``adapt_every=0`` (the
+default) freezes the router and the engine behaves exactly like the
+pre-adaptation engine, bit-for-bit.
 
 Two decision paths exist for the scoring itself:
 
@@ -72,11 +95,16 @@ from repro.core.library import ModelLibrary
 from repro.core.objective import (Constraint, cascade_choice,
                                   confidence_scores, constraint_matrix,
                                   escalation_order)
-from repro.core.router import (RouterConfig, predict_losses,
-                               predict_uncertainty, router_embed)
+from repro.core.router import (RouterConfig, VersionedParams,
+                               predict_losses, predict_uncertainty,
+                               router_embed)
+from repro.core.training import (make_router_update_step,
+                                 router_prediction_error)
 from repro.kernels.router_score import ops as rs_ops
 from repro.models.model import forward
 from repro.serving.cache import DecisionCache
+from repro.serving.feedback import ReplayBuffer
+from repro.serving.pipeline import ServingPipeline
 from repro.serving.requests import Request, Result, lambda_matrix
 from repro.serving.scheduler import ExpertScheduler, LaneEntry
 
@@ -121,6 +149,21 @@ class EngineStats:
     tier_latencies: dict = dataclasses.field(
         default_factory=lambda: defaultdict(
             lambda: deque(maxlen=65536)))
+    # online-adaptation telemetry: router updates applied (and the
+    # resulting router version), feedback samples published, replay
+    # occupancy, wall time spent in update steps, and the mean
+    # |L-hat[chosen] - L_observed| on the last replayed batch before and
+    # after its update (the adaptation loop's health signal: post < pre
+    # means the update moved predictions toward observed reality).
+    adapt_updates: int = 0
+    router_version: int = 0
+    feedback_events: int = 0
+    feedback_dropped: int = 0
+    replay_len: int = 0
+    replay_cap: int = 0
+    adapt_time_s: float = 0.0
+    adapt_pre_err: float = 0.0
+    adapt_post_err: float = 0.0
 
     @property
     def cache_hit_rate(self) -> float:
@@ -167,11 +210,22 @@ class EngineStats:
                     "tier_latency": {
                         tier: {k: round(v, 6) for k, v in p.items()}
                         for tier, p in
-                        self.tier_latency_percentiles().items()}}}
+                        self.tier_latency_percentiles().items()}},
+                "adaptation": {
+                    "updates": self.adapt_updates,
+                    "router_version": self.router_version,
+                    "feedback_events": self.feedback_events,
+                    "feedback_dropped": self.feedback_dropped,
+                    "replay": {"len": self.replay_len,
+                               "cap": self.replay_cap},
+                    "pre_err": round(self.adapt_pre_err, 6),
+                    "post_err": round(self.adapt_post_err, 6),
+                    "time_s": round(self.adapt_time_s, 3)}}
 
 
 class TryageEngine:
-    """Two-stage serving pipeline over a model library.
+    """Staged serving pipeline (Route -> Cascade -> Execute -> Feedback)
+    over a model library.
 
     Scheduler knobs (used by ``serve()``):
 
@@ -182,10 +236,22 @@ class TryageEngine:
       holding even a single request flushes once it has waited this long.
     - ``decision_cache`` / ``cache_capacity``: exact LRU memoisation of
       routing decisions keyed on (token bytes, lambda vector,
-      confidence threshold).
+      confidence threshold, router version).
     - ``cascade_max_depth``: bound on escalation steps per request; 0
       disables the cascade engine-wide regardless of request thresholds.
     - ``now_fn``: engine clock (injectable for deterministic tests).
+
+    Online-adaptation knobs (used by the Feedback stage):
+
+    - ``adapt_every``: feedback samples between router updates; 0 (the
+      default) freezes the router — no updates, ever.
+    - ``adapt_lr`` / ``adapt_ema`` / ``adapt_batch`` /
+      ``adapt_trainable``: the incremental update recipe (see
+      ``core.training.make_router_update_step``); ``"head"`` adapts the
+      loss head only (the stable default), ``"all"`` also fine-tunes
+      the encoder.
+    - ``replay_cap``: bounded replay-buffer capacity; 0 disables
+      feedback collection entirely.
     """
 
     def __init__(self, library: ModelLibrary, router_params,
@@ -195,10 +261,17 @@ class TryageEngine:
                  lane_target: int | None = None, max_wait_s: float = 0.05,
                  decision_cache: bool = True, cache_capacity: int = 4096,
                  cascade_max_depth: int = 2,
+                 adapt_every: int = 0, adapt_lr: float = 1e-2,
+                 adapt_ema: float = 0.0, adapt_batch: int = 32,
+                 adapt_trainable: str = "head", replay_cap: int = 4096,
+                 adapt_seed: int = 0,
                  now_fn: Callable[[], float] = time.monotonic):
         assert len(library) == rc.n_models
         self.library = library
-        self.router_params = router_params
+        # the served router is a versioned snapshot: online adaptation
+        # computes new weights off to the side and publishes them with
+        # an atomic swap that bumps the version (and the cache keys)
+        self._router = VersionedParams(router_params, 0)
         self.rc = rc
         self.constraints = list(constraints)
         self.max_batch = max_batch
@@ -214,6 +287,32 @@ class TryageEngine:
         self._now = now_fn
         self.queue: list[Request] = []
         self.stats = EngineStats()
+
+        # online adaptation: replay buffer + jit'd incremental update.
+        # The buffer fills whenever feedback is available (telemetry and
+        # offline analysis want it even for a frozen router); updates
+        # only happen when adapt_every > 0.
+        if adapt_every < 0 or adapt_batch < 1:
+            raise ValueError("adapt_every must be >= 0 and "
+                             "adapt_batch >= 1")
+        if adapt_every > 0 and replay_cap <= 0:
+            raise ValueError("adapt_every > 0 needs a replay buffer "
+                             "(replay_cap >= 1)")
+        self.adapt_every = adapt_every
+        self.adapt_batch = adapt_batch
+        self.replay = ReplayBuffer(replay_cap) if replay_cap > 0 else None
+        self._adapt_rng = np.random.default_rng(adapt_seed)
+        self._fb_at_last_update = 0
+        if adapt_every > 0:
+            self._update_step = make_router_update_step(
+                rc, lr=adapt_lr, ema=adapt_ema, trainable=adapt_trainable)
+            self._pred_err = jax.jit(
+                lambda p, t, e, o: router_prediction_error(p, rc, t, e, o))
+
+        # the staged pipeline: Route -> Cascade (admission half) and
+        # Execute -> Feedback (flush half), composed over this engine's
+        # jit'd primitives
+        self.pipeline = ServingPipeline(self)
 
         self._cnames = [c.name for c in self.constraints]
         self._cmat = constraint_matrix(self.constraints, rc.n_models)
@@ -240,6 +339,18 @@ class TryageEngine:
         for e in library.experts:
             self._expert_fns[e.name] = jax.jit(
                 functools.partial(self._expert_forward, cfg=e.cfg))
+
+    @property
+    def router_params(self):
+        """The live router snapshot's parameter tree (read-only view;
+        adaptation publishes new trees via ``VersionedParams.swap``)."""
+        return self._router.params
+
+    @property
+    def router_version(self) -> int:
+        """Monotone version of the live router snapshot — part of every
+        decision-cache key."""
+        return self._router.version
 
     @staticmethod
     def _expert_forward(params, toks, targets, mask, *, cfg):
@@ -366,50 +477,16 @@ class TryageEngine:
 
     def _route_admitted(self, reqs: list[Request]) -> tuple[
             np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-        """Route a batch through the decision cache: cached requests skip
-        scoring, misses are scored as one (smaller) batch, cascaded, and
-        inserted.  The cached verdict is post-cascade (the key carries
-        the confidence threshold, so it stays exact).
+        """Run the admission half of the pipeline (Route -> Cascade):
+        cached requests skip scoring, misses are scored as one (smaller)
+        batch, cascaded, and memoised post-cascade.
 
         Returns ``(pred_losses (B, M), choice (B,), cached (B,) bool,
         depth (B,) int, confidence (B,) float)`` — ``choice`` is the
         final post-escalation expert.
         """
-        B = len(reqs)
-        if self.cache is None:
-            pred, choice = self._score_batch(reqs)
-            choice, depth, conf = self._cascade(reqs, pred, choice)
-            return pred, choice, np.zeros(B, bool), depth, conf
-        pred = np.zeros((B, self.rc.n_models), np.float32)
-        choice = np.zeros(B, np.int64)
-        cached = np.zeros(B, bool)
-        depth = np.zeros(B, np.int64)
-        conf = np.ones(B, np.float64)
-        keys = [DecisionCache.key(r.tokens, r.lambdas, self._cnames,
-                                  r.min_confidence)
-                for r in reqs]
-        misses = []
-        for i, key in enumerate(keys):
-            hit = self.cache.get(key)
-            if hit is None:
-                misses.append(i)
-            else:
-                pred[i], choice[i], depth[i], conf[i] = hit
-                cached[i] = True
-        if misses:
-            miss_reqs = [reqs[i] for i in misses]
-            mpred, mchoice = self._score_batch(miss_reqs)
-            mchoice, mdepth, mconf = self._cascade(miss_reqs, mpred, mchoice)
-            for j, i in enumerate(misses):
-                pred[i] = mpred[j]
-                choice[i] = mchoice[j]
-                depth[i] = mdepth[j]
-                conf[i] = mconf[j]
-                self.cache.put(keys[i], mpred[j], mchoice[j],
-                               int(mdepth[j]), float(mconf[j]))
-        self.stats.cache_hits += B - len(misses)
-        self.stats.cache_misses += len(misses)
-        return pred, choice, cached, depth, conf
+        ctx = self.pipeline.admit(reqs)
+        return ctx.pred, ctx.choice, ctx.cached, ctx.depth, ctx.confidence
 
     def _route_batch(self, reqs: list[Request]) -> tuple[np.ndarray,
                                                          np.ndarray]:
@@ -418,6 +495,46 @@ class TryageEngine:
         cascade depth and confidence."""
         pred, choice, _, _, _ = self._route_admitted(reqs)
         return pred, choice
+
+    # ------------------------------------------------ online adaptation
+
+    def _maybe_adapt(self):
+        """Feedback-cadenced router refresh (called by the Feedback
+        stage after each flush).
+
+        One incremental update per ``adapt_every`` published feedback
+        samples — a large flush that publishes several multiples of
+        ``adapt_every`` at once applies every update it owes, so the
+        adaptation rate tracks the documented cadence regardless of
+        micro-batch size.  Each update replays a fresh batch, runs the
+        jit'd step on shadow weights, measures the batch prediction
+        error before/after, and publishes the new snapshot with an
+        atomic version-bumping swap.  The decision cache is cleared on
+        swap — the version in the key already makes stale verdicts
+        unreachable; clearing just reclaims their memory.
+        """
+        if self.adapt_every <= 0 or self.replay is None:
+            return
+        while (self.replay.seen - self._fb_at_last_update
+               >= self.adapt_every):
+            self._fb_at_last_update += self.adapt_every
+            t0 = self._now()
+            toks, eidx, obs = self.replay.sample(self.adapt_batch,
+                                                 self._adapt_rng)
+            jt, je, jo = (jnp.asarray(toks), jnp.asarray(eidx),
+                          jnp.asarray(obs))
+            pre = float(self._pred_err(self.router_params, jt, je, jo))
+            new_params, _ = self._update_step(self.router_params,
+                                              jt, je, jo)
+            post = float(self._pred_err(new_params, jt, je, jo))
+            self._router = self._router.swap(new_params)
+            if self.cache is not None:
+                self.cache.clear()
+            self.stats.adapt_updates += 1
+            self.stats.router_version = self._router.version
+            self.stats.adapt_pre_err = pre
+            self.stats.adapt_post_err = post
+            self.stats.adapt_time_s += self._now() - t0
 
     # --------------------------------------------------- expert executor
 
@@ -446,41 +563,9 @@ class TryageEngine:
 
     def _execute(self, expert_idx: int, entries: list[LaneEntry],
                  reason: str) -> list[Result]:
-        """Launch one per-expert micro-batch and materialise Results with
-        true enqueue->flush latency."""
-        e = self.library[expert_idx]
-        t0 = self._now()
-        preds, ex_loss, ex_acc = self._run_expert(
-            e, [en.req for en in entries])
-        end = self._now()
-        self.stats.expert_time_s += end - t0
-        self.stats.flushes[reason] += 1
-        out = []
-        for j, en in enumerate(entries):
-            r = en.req
-            loss = acc = None
-            if (r.targets is not None and r.mask is not None
-                    and r.mask.astype(bool).any()):
-                loss = float(ex_loss[j])
-                acc = float(ex_acc[j])
-            flops = 2.0 * e.n_params * len(r.tokens)
-            latency = (max(end - r.arrival, 0.0) if r.arrival is not None
-                       else end - t0)
-            out.append(Result(
-                uid=r.uid, expert=e.name, pred_losses=en.pred,
-                predictions=preds[j], loss=loss, accuracy=acc,
-                flops_proxy=flops, latency_s=latency, cached=en.cached,
-                flush_reason=reason, cascade_depth=en.depth,
-                confidence=en.confidence))
-            self.stats.served += 1
-            self.stats.per_expert[e.name] += 1
-            self.stats.total_flops += flops
-            self.stats.latencies.append(latency)
-            self.stats.cascade_depth_hist[en.depth] += 1
-            self.stats.tier_latencies[en.depth].append(latency)
-            if en.depth > 0:
-                self.stats.escalations += 1
-        return out
+        """Run the flush half of the pipeline (Execute -> Feedback) on
+        one per-expert micro-batch and return its Results."""
+        return self.pipeline.flush(expert_idx, entries, reason)
 
     # -------------------------------------------------------- disciplines
 

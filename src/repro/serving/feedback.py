@@ -1,0 +1,86 @@
+"""Execution feedback: the signal source for online router adaptation.
+
+Expert execution already measures, for every request that carries MLM
+targets, the *observed* masked NLL of the expert that actually served
+it.  That is exactly the supervision the router was trained on — a
+(prompt, expert, loss) sample of the Q function — except it arrives for
+free, continuously, from live traffic.  The pipeline's Feedback stage
+publishes each such sample here; the adaptation loop replays bounded
+batches of them through the update step built by
+``core.training.make_router_update_step`` to keep loss predictions
+tracking downstream expert performance under drift.
+
+Design notes:
+
+* **Bounded ring.**  The buffer keeps the most recent ``capacity``
+  samples and drops the oldest — under a distribution shift the buffer
+  composition converges to the new traffic within one capacity's worth
+  of requests, which is what makes replayed updates *track* drift
+  instead of averaging it away.
+* **Bandit feedback.**  Only the chosen expert's loss is observed (the
+  other experts never ran), so a replayed sample supervises a single
+  entry of the router's prediction vector.  The escalation cascade and
+  exploration in traffic provide the off-policy coverage.
+* **Homogeneous sequence length.**  Samples are stacked into dense
+  arrays for the jit'd update step, so all tokens in one buffer must
+  share a sequence length.  The first sample fixes the shape; later
+  samples with a different shape are *dropped and counted*
+  (``ReplayBuffer.dropped``) rather than raised — mixed-length traffic
+  is legal for serving, it just cannot all feed one replay batch.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class ReplayBuffer:
+    """Bounded FIFO ring of feedback samples with batch sampling.
+
+    ``add`` is O(1); ``sample`` draws a uniform batch (with replacement,
+    so a fixed ``batch`` size — and therefore a single jit compilation
+    of the update step — works at any occupancy >= 1).
+    """
+
+    def __init__(self, capacity: int = 4096):
+        assert capacity >= 1
+        self.capacity = capacity
+        self.seen = 0                      # accepted samples, ever
+        self.dropped = 0                   # shape-mismatched, ever
+        self._tokens: list[np.ndarray] = []
+        self._experts: list[int] = []
+        self._losses: list[float] = []
+        self._head = 0                     # ring cursor once full
+
+    def __len__(self) -> int:
+        return len(self._tokens)
+
+    def add(self, tokens: np.ndarray, expert_idx: int,
+            observed_loss: float) -> bool:
+        """Publish one sample; returns False (counted in ``dropped``)
+        when its shape does not match the buffer's first sample."""
+        if self._tokens and tokens.shape != self._tokens[0].shape:
+            self.dropped += 1
+            return False
+        tokens = np.array(tokens, copy=True)   # detach from the request
+        self.seen += 1
+        if len(self._tokens) < self.capacity:
+            self._tokens.append(tokens)
+            self._experts.append(int(expert_idx))
+            self._losses.append(float(observed_loss))
+        else:
+            self._tokens[self._head] = tokens
+            self._experts[self._head] = int(expert_idx)
+            self._losses[self._head] = float(observed_loss)
+            self._head = (self._head + 1) % self.capacity
+        return True
+
+    def sample(self, batch: int, rng: np.random.Generator,
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Uniform batch with replacement: ``(tokens (B, S) int,
+        expert_idx (B,) int32, observed_loss (B,) float32)``."""
+        assert len(self) >= 1, "cannot sample an empty replay buffer"
+        idx = rng.integers(0, len(self), size=batch)
+        return (np.stack([self._tokens[i] for i in idx]),
+                np.array([self._experts[i] for i in idx], np.int32),
+                np.array([self._losses[i] for i in idx], np.float32))

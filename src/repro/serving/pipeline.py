@@ -1,0 +1,261 @@
+"""The staged serving pipeline: Route -> Cascade -> Execute -> Feedback.
+
+``TryageEngine`` used to hard-wire this flow inside ``_route_admitted``
+and ``_execute``; this module makes each stage an explicit object over a
+shared typed context, so the flow reads top-to-bottom and new stages
+(the Feedback stage that closes the online-adaptation loop is the first
+beneficiary) slot in without touching the scheduler or the disciplines.
+
+Two context types, matching the engine's two batch granularities:
+
+* ``RouteContext`` — one *admission batch* flowing Route -> Cascade.
+  Route fills router predictions and raw expert choices (cache-aware:
+  hits skip scoring, misses are scored as one smaller batch); Cascade
+  applies the abstention/escalation rule to freshly scored rows and
+  memoises the post-cascade verdict.
+* ``FlushContext`` — one *per-expert micro-batch* flowing Execute ->
+  Feedback.  Execute launches the padded expert forward and materialises
+  ``Result``s; Feedback publishes each observed (prompt, expert, loss)
+  sample to the engine's replay buffer and gives the adaptation loop a
+  chance to refresh the router.
+
+Stages are deliberately thin orchestration over the engine's compute
+primitives (``_score_batch``, ``_cascade``, ``_run_expert`` — the jit'd
+functions live on the engine so compilation caches survive across
+batches).  The split point between the halves is the scheduler: routed
+requests wait in per-expert lanes between ``admit`` and ``flush``, so
+Execute runs on micro-batches that mix requests from many admission
+batches.
+
+Behaviour contract: with adaptation disabled (``adapt_every=0``) and
+``min_confidence=0`` the pipeline reproduces the pre-pipeline engine
+bit-for-bit — identical choices, Results and EngineStats
+(tests/test_pipeline.py enforces this against a reference
+implementation of the old hard-wired flow).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.serving.cache import DecisionCache
+from repro.serving.requests import Request, Result
+from repro.serving.scheduler import LaneEntry
+
+if TYPE_CHECKING:                                      # pragma: no cover
+    from repro.serving.engine import TryageEngine
+
+
+@dataclasses.dataclass
+class RouteContext:
+    """One admission batch flowing Route -> Cascade.
+
+    ``pred``/``choice``/``cached``/``depth``/``confidence`` are dense
+    per-request arrays (allocated by RouteStage); ``miss_idx`` lists the
+    rows that were freshly scored this batch — the only rows Cascade
+    touches, because cache hits already carry their post-cascade
+    verdict.  ``keys`` holds the decision-cache keys (None when the
+    cache is disabled).
+    """
+
+    reqs: list[Request]
+    pred: np.ndarray | None = None          # (B, M) f32 router L-hat
+    choice: np.ndarray | None = None        # (B,) i64 expert index
+    cached: np.ndarray | None = None        # (B,) bool cache hits
+    depth: np.ndarray | None = None         # (B,) i64 cascade depth
+    confidence: np.ndarray | None = None    # (B,) f64 final confidence
+    keys: list | None = None
+    miss_idx: list[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class FlushContext:
+    """One per-expert micro-batch flowing Execute -> Feedback."""
+
+    expert_idx: int
+    entries: list[LaneEntry]
+    reason: str
+    results: list[Result] = dataclasses.field(default_factory=list)
+
+
+class RouteStage:
+    """Score an admission batch through the decision cache.
+
+    Hits return their memoised post-cascade verdict; misses are scored
+    as one (smaller) batch with the router.  The cache key carries the
+    live router version (``engine.router_version``), so verdicts scored
+    by a superseded router can never hit."""
+
+    def __init__(self, engine: "TryageEngine"):
+        self.eng = engine
+
+    def __call__(self, ctx: RouteContext) -> RouteContext:
+        eng = self.eng
+        B = len(ctx.reqs)
+        ctx.pred = np.zeros((B, eng.rc.n_models), np.float32)
+        ctx.choice = np.zeros(B, np.int64)
+        ctx.cached = np.zeros(B, bool)
+        ctx.depth = np.zeros(B, np.int64)
+        ctx.confidence = np.ones(B, np.float64)
+        if eng.cache is None:
+            pred, choice = eng._score_batch(ctx.reqs)
+            ctx.pred[:] = pred
+            ctx.choice[:] = choice
+            ctx.miss_idx = list(range(B))
+            return ctx
+        ctx.keys = [DecisionCache.key(r.tokens, r.lambdas, eng._cnames,
+                                      r.min_confidence, eng.router_version)
+                    for r in ctx.reqs]
+        misses = []
+        for i, key in enumerate(ctx.keys):
+            hit = eng.cache.get(key)
+            if hit is None:
+                misses.append(i)
+            else:
+                (ctx.pred[i], ctx.choice[i], ctx.depth[i],
+                 ctx.confidence[i]) = hit
+                ctx.cached[i] = True
+        if misses:
+            mpred, mchoice = eng._score_batch([ctx.reqs[i] for i in misses])
+            for j, i in enumerate(misses):
+                ctx.pred[i] = mpred[j]
+                ctx.choice[i] = mchoice[j]
+        ctx.miss_idx = misses
+        eng.stats.cache_hits += B - len(misses)
+        eng.stats.cache_misses += len(misses)
+        return ctx
+
+
+class CascadeStage:
+    """Apply the abstention/escalation rule to freshly scored rows and
+    memoise the post-cascade verdict.
+
+    Only ``miss_idx`` rows are cascaded — cache hits were stored *after*
+    their cascade, so re-running it would double-escalate.  The
+    single-shot fast path (no request carries a confidence floor) is
+    inherited from ``engine._cascade``: the sigma pass is skipped and
+    choices pass through untouched."""
+
+    def __init__(self, engine: "TryageEngine"):
+        self.eng = engine
+
+    def __call__(self, ctx: RouteContext) -> RouteContext:
+        eng = self.eng
+        if not ctx.miss_idx:
+            return ctx
+        miss_reqs = [ctx.reqs[i] for i in ctx.miss_idx]
+        mpred = ctx.pred[ctx.miss_idx]
+        mchoice, mdepth, mconf = eng._cascade(
+            miss_reqs, mpred, ctx.choice[ctx.miss_idx])
+        for j, i in enumerate(ctx.miss_idx):
+            ctx.choice[i] = mchoice[j]
+            ctx.depth[i] = mdepth[j]
+            ctx.confidence[i] = mconf[j]
+            if ctx.keys is not None:
+                eng.cache.put(ctx.keys[i], mpred[j], mchoice[j],
+                              int(mdepth[j]), float(mconf[j]))
+        return ctx
+
+
+class ExecuteStage:
+    """Launch one padded per-expert micro-batch and materialise Results
+    with true enqueue->flush latency; all execution telemetry
+    (flushes, buckets, latencies, cascade histogram) lands here."""
+
+    def __init__(self, engine: "TryageEngine"):
+        self.eng = engine
+
+    def __call__(self, ctx: FlushContext) -> FlushContext:
+        eng = self.eng
+        e = eng.library[ctx.expert_idx]
+        t0 = eng._now()
+        preds, ex_loss, ex_acc = eng._run_expert(
+            e, [en.req for en in ctx.entries])
+        end = eng._now()
+        eng.stats.expert_time_s += end - t0
+        eng.stats.flushes[ctx.reason] += 1
+        for j, en in enumerate(ctx.entries):
+            r = en.req
+            loss = acc = None
+            if (r.targets is not None and r.mask is not None
+                    and r.mask.astype(bool).any()):
+                loss = float(ex_loss[j])
+                acc = float(ex_acc[j])
+            flops = 2.0 * e.n_params * len(r.tokens)
+            latency = (max(end - r.arrival, 0.0) if r.arrival is not None
+                       else end - t0)
+            ctx.results.append(Result(
+                uid=r.uid, expert=e.name, pred_losses=en.pred,
+                predictions=preds[j], loss=loss, accuracy=acc,
+                flops_proxy=flops, latency_s=latency, cached=en.cached,
+                flush_reason=ctx.reason, cascade_depth=en.depth,
+                confidence=en.confidence))
+            eng.stats.served += 1
+            eng.stats.per_expert[e.name] += 1
+            eng.stats.total_flops += flops
+            eng.stats.latencies.append(latency)
+            eng.stats.cascade_depth_hist[en.depth] += 1
+            eng.stats.tier_latencies[en.depth].append(latency)
+            if en.depth > 0:
+                eng.stats.escalations += 1
+        return ctx
+
+
+class FeedbackStage:
+    """Close the loop: publish each observed (prompt, expert, loss)
+    sample to the replay buffer and let the adaptation loop refresh the
+    router.
+
+    A sample is published only when the expert's loss was actually
+    measured (``Result.loss`` is not None — the request carried MLM
+    targets); samples whose token shape does not match the buffer's are
+    dropped and counted (mixed-length traffic serves fine, it just
+    cannot all feed one replay batch).  ``engine._maybe_adapt`` is a
+    no-op unless the engine was built with ``adapt_every > 0``, so the
+    feedback stage is free for frozen-router serving."""
+
+    def __init__(self, engine: "TryageEngine"):
+        self.eng = engine
+
+    def __call__(self, ctx: FlushContext) -> FlushContext:
+        eng = self.eng
+        if eng.replay is None:
+            return ctx
+        for en, res in zip(ctx.entries, ctx.results):
+            if res.loss is None:
+                continue
+            eng.replay.add(en.req.tokens, ctx.expert_idx, res.loss)
+        eng.stats.feedback_events = eng.replay.seen
+        eng.stats.feedback_dropped = eng.replay.dropped
+        eng.stats.replay_len = len(eng.replay)
+        eng.stats.replay_cap = eng.replay.capacity
+        eng._maybe_adapt()
+        return ctx
+
+
+class ServingPipeline:
+    """The four stages composed over one engine.
+
+    ``admit``  runs Route -> Cascade on an admission batch and returns
+               the filled RouteContext (the engine pushes the rows into
+               scheduler lanes, or executes them directly under FIFO).
+    ``flush``  runs Execute -> Feedback on one per-expert micro-batch
+               and returns its Results.
+    """
+
+    def __init__(self, engine: "TryageEngine"):
+        self.route = RouteStage(engine)
+        self.cascade = CascadeStage(engine)
+        self.execute = ExecuteStage(engine)
+        self.feedback = FeedbackStage(engine)
+
+    def admit(self, reqs: list[Request]) -> RouteContext:
+        return self.cascade(self.route(RouteContext(reqs)))
+
+    def flush(self, expert_idx: int, entries: list[LaneEntry],
+              reason: str) -> list[Result]:
+        ctx = FlushContext(expert_idx, entries, reason)
+        return self.feedback(self.execute(ctx)).results

@@ -1,5 +1,6 @@
-"""Cross-batch expert-affinity scheduler: the executor half of the
-two-stage serving pipeline.
+"""Cross-batch expert-affinity scheduler: the gap between the routing
+half (Route -> Cascade) and the execution half (Execute -> Feedback) of
+the staged serving pipeline.
 
 The routing stage (``TryageEngine._route_batch``) scores admitted
 requests and tags each with an expert choice; this module owns what

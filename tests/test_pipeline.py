@@ -1,0 +1,475 @@
+"""Staged pipeline (Route -> Cascade -> Execute -> Feedback) and the
+online-adaptation subsystem.
+
+The centerpiece is the behaviour-preservation contract of the PR-4
+refactor: with adaptation off (``adapt_every=0``, the default) the
+staged pipeline must reproduce the previous engine's hard-wired
+route->cascade->execute flow *bit-for-bit* — identical expert choices,
+identical Result fields, identical EngineStats — on the 256-request
+mixed-flag workload, under both disciplines, with and without cascade
+traffic.  The reference implementation below is a line-for-line copy of
+the pre-pipeline orchestration (PR 3 ``_route_admitted`` + ``run`` +
+``serve``) driven over the same engine primitives, so the comparison is
+environment-independent: any behavioural drift introduced by the stage
+split shows up as a hard mismatch.
+
+The adaptation tests cover the replay buffer, the jit'd incremental
+update (shadow weights, head-only scope, EMA damping), the version
+bump + cache invalidation on swap (no stale-verdict hits), and the
+engine-level feedback cadence.  Deliberately hypothesis-free so the
+whole module runs without the optional property-testing dep.
+"""
+
+import dataclasses
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.router import (RouterConfig, VersionedParams, init_router,
+                               predict_losses)
+from repro.core.training import (make_router_update_step,
+                                 router_prediction_error)
+from repro.data.batching import mlm_batch
+from repro.serving import (DecisionCache, ExpertScheduler, ReplayBuffer,
+                           Request, TryageEngine)
+from repro.serving.pipeline import RouteContext
+
+RC = RouterConfig(n_models=3, vocab_size=64, num_layers=1, d_model=32,
+                  num_heads=2, d_ff=64)
+
+
+class Clock:
+    def __init__(self, t=1.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def router_params():
+    rp, _ = init_router(jax.random.PRNGKey(9), RC)
+    return rp
+
+
+def _requests(n, seed=0, min_confidence=0.0, n_unique=None):
+    """Mixed-flag MLM workload; the tail repeats earlier prompts +
+    lambdas so the decision cache sees production-shaped traffic."""
+    n_unique = n if n_unique is None else n_unique
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(4, 64, size=(n_unique, 32)).astype(np.int32)
+    mb = mlm_batch(toks, rng, 0.2, 64)
+    mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
+    return [Request(uid=i, tokens=mb["tokens"][i % n_unique],
+                    targets=mb["targets"][i % n_unique],
+                    mask=mb["mask"][i % n_unique],
+                    lambdas=mix[i % len(mix)],
+                    min_confidence=min_confidence)
+            for i in range(n)]
+
+
+def _engine(library, params, clock, **kw):
+    from repro.core.objective import recency_constraint, size_constraint
+    cons = [size_constraint(library), recency_constraint(library)]
+    kw.setdefault("max_batch", 32)
+    return TryageEngine(library, params, RC, cons, now_fn=clock, **kw)
+
+
+# ------------------------------------------------- PR 3 reference flow
+#
+# A line-for-line copy of the pre-pipeline engine's orchestration: the
+# hard-wired _route_admitted (cache probe -> score misses -> cascade ->
+# insert) plus the run()/serve() drive loops, expressed over the same
+# engine primitives the stages use.  This is the behaviour the staged
+# pipeline must reproduce bit-for-bit when adaptation is off.
+
+
+def _pr3_route_admitted(eng, reqs):
+    B = len(reqs)
+    if eng.cache is None:
+        pred, choice = eng._score_batch(reqs)
+        choice, depth, conf = eng._cascade(reqs, pred, choice)
+        return pred, choice, np.zeros(B, bool), depth, conf
+    pred = np.zeros((B, eng.rc.n_models), np.float32)
+    choice = np.zeros(B, np.int64)
+    cached = np.zeros(B, bool)
+    depth = np.zeros(B, np.int64)
+    conf = np.ones(B, np.float64)
+    keys = [DecisionCache.key(r.tokens, r.lambdas, eng._cnames,
+                              r.min_confidence, eng.router_version)
+            for r in reqs]
+    misses = []
+    for i, key in enumerate(keys):
+        hit = eng.cache.get(key)
+        if hit is None:
+            misses.append(i)
+        else:
+            pred[i], choice[i], depth[i], conf[i] = hit
+            cached[i] = True
+    if misses:
+        miss_reqs = [reqs[i] for i in misses]
+        mpred, mchoice = eng._score_batch(miss_reqs)
+        mchoice, mdepth, mconf = eng._cascade(miss_reqs, mpred, mchoice)
+        for j, i in enumerate(misses):
+            pred[i] = mpred[j]
+            choice[i] = mchoice[j]
+            depth[i] = mdepth[j]
+            conf[i] = mconf[j]
+            eng.cache.put(keys[i], mpred[j], mchoice[j],
+                          int(mdepth[j]), float(mconf[j]))
+    eng.stats.cache_hits += B - len(misses)
+    eng.stats.cache_misses += len(misses)
+    return pred, choice, cached, depth, conf
+
+
+def _pr3_run(eng):
+    from collections import defaultdict
+
+    from repro.serving.scheduler import LaneEntry
+    results = []
+    while eng.queue:
+        batch, eng.queue = (eng.queue[:eng.max_batch],
+                            eng.queue[eng.max_batch:])
+        pred, choice, cached, depth, conf = _pr3_route_admitted(eng, batch)
+        by_expert = defaultdict(list)
+        for i, c in enumerate(choice):
+            by_expert[int(c)].append(i)
+        for mi, idxs in sorted(by_expert.items()):
+            entries = [LaneEntry(batch[i], pred[i], i, bool(cached[i]),
+                                 int(depth[i]), float(conf[i]))
+                       for i in idxs]
+            results.extend(eng._execute(mi, entries, "fifo"))
+    return results
+
+
+def _pr3_serve(eng, request_iter):
+    sched = ExpertScheduler(len(eng.library), eng.lane_target,
+                            eng.max_wait_s)
+    admitted = []
+
+    def _admit():
+        pred, choice, cached, depth, conf = _pr3_route_admitted(
+            eng, admitted)
+        for i, r in enumerate(admitted):
+            sched.push(int(choice[i]), r, pred[i], bool(cached[i]),
+                       int(depth[i]), float(conf[i]))
+        admitted.clear()
+
+    if eng.queue:
+        queued, eng.queue = eng.queue, []
+        request_iter = itertools.chain(queued, request_iter)
+    for item in request_iter:
+        if item is not None:
+            if item.arrival is None:
+                item.arrival = eng._now()
+            admitted.append(item)
+        if admitted and (len(admitted) >= eng.max_batch
+                         or (eng._now() - admitted[0].arrival
+                             >= 0.5 * eng.max_wait_s)):
+            _admit()
+        for mi, entries, reason in sched.pop_ready(eng._now()):
+            yield from eng._execute(mi, entries, reason)
+    if admitted:
+        _admit()
+    for mi, entries, reason in sched.drain():
+        yield from eng._execute(mi, entries, reason)
+    for mi, peak in sched.peaks().items():
+        name = eng.library[mi].name
+        eng.stats.lane_peaks[name] = max(
+            eng.stats.lane_peaks.get(name, 0), peak)
+    for mi, peak in sched.esc_peaks().items():
+        name = eng.library[mi].name + "@esc"
+        eng.stats.lane_peaks[name] = max(
+            eng.stats.lane_peaks.get(name, 0), peak)
+
+
+def _result_key(r):
+    d = dataclasses.asdict(r)
+    d["pred_losses"] = d["pred_losses"].tobytes()
+    d["predictions"] = d["predictions"].tobytes()
+    return d
+
+
+@pytest.mark.parametrize("discipline,min_conf", [
+    ("run", 0.0), ("serve", 0.0), ("run", 0.99), ("serve", 0.99)])
+def test_pipeline_matches_pr3_flow_bit_for_bit(tiny_library, router_params,
+                                               discipline, min_conf):
+    """The staged pipeline (adaptation off) reproduces the pre-pipeline
+    engine on the 256-request mixed-flag workload: identical choices,
+    Results and EngineStats, cache hits included."""
+    outs, stats = [], []
+    for flow in ("pipeline", "pr3"):
+        clock = Clock()
+        eng = _engine(tiny_library, router_params, clock, lane_target=8,
+                      max_wait_s=1e9)
+        reqs = _requests(256, seed=7, min_confidence=min_conf, n_unique=192)
+        if discipline == "run":
+            for r in reqs:
+                eng.submit(r)
+            out = eng.run() if flow == "pipeline" else _pr3_run(eng)
+        else:
+            it = iter(reqs)
+            out = list(eng.serve(it) if flow == "pipeline"
+                       else _pr3_serve(eng, it))
+        assert len(out) == 256
+        outs.append(sorted(out, key=lambda r: r.uid))
+        stats.append(eng.stats.summary())
+    for a, b in zip(*outs):
+        assert _result_key(a) == _result_key(b)
+    assert stats[0] == stats[1]
+    assert stats[0]["cache"]["hits"] == 64          # 64/256 repeats
+    assert stats[0]["adaptation"]["updates"] == 0
+    assert stats[0]["adaptation"]["router_version"] == 0
+    # feedback is collected (for telemetry) even with a frozen router:
+    # one sample per request whose loss was actually measured
+    measured = sum(1 for r in outs[0] if r.loss is not None)
+    assert stats[0]["adaptation"]["feedback_events"] == measured > 0
+
+
+def test_admit_context_contract(tiny_library, router_params):
+    """pipeline.admit fills every RouteContext field with dense arrays
+    of the right shape/dtype."""
+    eng = _engine(tiny_library, router_params, Clock())
+    reqs = _requests(5, seed=3)
+    ctx = eng.pipeline.admit(reqs)
+    assert isinstance(ctx, RouteContext)
+    assert ctx.pred.shape == (5, 3) and ctx.pred.dtype == np.float32
+    assert ctx.choice.shape == (5,) and ctx.choice.dtype == np.int64
+    assert ctx.cached.shape == (5,) and ctx.cached.dtype == bool
+    assert ctx.depth.shape == (5,) and ctx.confidence.shape == (5,)
+    assert ctx.miss_idx == list(range(5))           # cold cache
+    assert len(ctx.keys) == 5
+    # second admit of the same requests: all hits, no fresh rows
+    ctx2 = eng.pipeline.admit(_requests(5, seed=3))
+    assert ctx2.miss_idx == [] and ctx2.cached.all()
+    np.testing.assert_array_equal(ctx.choice, ctx2.choice)
+
+
+# ------------------------------------------------------- replay buffer
+
+
+def test_replay_buffer_bounded_ring():
+    buf = ReplayBuffer(capacity=4)
+    for i in range(6):
+        buf.add(np.full(8, i, np.int32), i % 3, float(i))
+    assert len(buf) == 4 and buf.seen == 6
+    toks, eidx, loss = buf.sample(16, np.random.default_rng(0))
+    assert toks.shape == (16, 8) and eidx.shape == (16,)
+    assert loss.shape == (16,) and loss.dtype == np.float32
+    # oldest two samples (0, 1) were overwritten by 4, 5
+    assert set(toks[:, 0].tolist()) <= {2, 3, 4, 5}
+
+
+def test_replay_buffer_drops_shape_mismatch():
+    """Mixed-length traffic must not crash serving: off-shape samples
+    are dropped and counted, never raised."""
+    buf = ReplayBuffer(capacity=4)
+    assert buf.add(np.zeros(8, np.int32), 0, 1.0)
+    assert not buf.add(np.zeros(16, np.int32), 0, 1.0)
+    assert len(buf) == 1 and buf.seen == 1 and buf.dropped == 1
+
+
+def test_engine_rejects_adaptation_without_replay(tiny_library,
+                                                  router_params):
+    with pytest.raises(ValueError, match="replay"):
+        _engine(tiny_library, router_params, Clock(), adapt_every=8,
+                replay_cap=0)
+
+
+def test_replay_buffer_detaches_tokens():
+    buf = ReplayBuffer(capacity=4)
+    toks = np.arange(8).astype(np.int32)
+    buf.add(toks, 0, 1.0)
+    toks[:] = -1
+    sampled, _, _ = buf.sample(1, np.random.default_rng(0))
+    assert (sampled[0] == np.arange(8)).all()
+
+
+# ------------------------------------------- incremental update step
+
+
+def test_versioned_params_swap_is_monotone_and_pure(router_params):
+    v0 = VersionedParams(router_params, 0)
+    v1 = v0.swap({"head": None})
+    assert (v0.version, v1.version) == (0, 1)
+    assert v0.params is router_params                # old snapshot intact
+    assert v1.swap({}).version == 2
+
+
+def _bandit_batch(params, seed=0, delta=2.0):
+    """Feedback batch whose observed losses sit ``delta`` above the
+    router's current predictions for the chosen experts."""
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(4, 64, size=(16, 32)).astype(np.int32)
+    pred = np.asarray(predict_losses(params, RC, {"tokens": toks}))
+    eidx = rng.integers(0, RC.n_models, size=16).astype(np.int32)
+    obs = pred[np.arange(16), eidx] + delta
+    return toks, eidx, obs.astype(np.float32)
+
+
+def test_router_update_step_moves_predictions_toward_observed():
+    rp, _ = init_router(jax.random.PRNGKey(0), RC)
+    toks, eidx, obs = _bandit_batch(rp)
+    err0 = float(router_prediction_error(rp, RC, toks, eidx, obs))
+    step = make_router_update_step(RC, lr=0.1, trainable="head")
+    p = rp
+    for _ in range(25):
+        p, loss = step(p, toks, eidx, obs)
+    err1 = float(router_prediction_error(p, RC, toks, eidx, obs))
+    assert err1 < 0.5 * err0, (err0, err1)
+    # shadow weights: the input tree was never mutated
+    err_again = float(router_prediction_error(rp, RC, toks, eidx, obs))
+    assert err_again == err0
+
+
+def test_head_only_update_freezes_encoder_and_unc():
+    rp, _ = init_router(jax.random.PRNGKey(1), RC, uncertainty=True)
+    toks, eidx, obs = _bandit_batch(rp, seed=1)
+    step = make_router_update_step(RC, lr=0.1, trainable="head")
+    new, _ = step(rp, toks, eidx, obs)
+    for leaf_old, leaf_new in zip(jax.tree.leaves(rp["encoder"]),
+                                  jax.tree.leaves(new["encoder"])):
+        np.testing.assert_array_equal(np.asarray(leaf_old),
+                                      np.asarray(leaf_new))
+    for leaf_old, leaf_new in zip(jax.tree.leaves(rp["unc"]),
+                                  jax.tree.leaves(new["unc"])):
+        np.testing.assert_array_equal(np.asarray(leaf_old),
+                                      np.asarray(leaf_new))
+    assert any((np.asarray(a) != np.asarray(b)).any()
+               for a, b in zip(jax.tree.leaves(rp["head"]),
+                               jax.tree.leaves(new["head"])))
+
+
+def test_full_update_adapts_encoder_but_never_unc():
+    rp, _ = init_router(jax.random.PRNGKey(2), RC, uncertainty=True)
+    toks, eidx, obs = _bandit_batch(rp, seed=2)
+    step = make_router_update_step(RC, lr=0.1, trainable="all")
+    new, _ = step(rp, toks, eidx, obs)
+    assert any((np.asarray(a) != np.asarray(b)).any()
+               for a, b in zip(jax.tree.leaves(rp["encoder"]),
+                               jax.tree.leaves(new["encoder"])))
+    for leaf_old, leaf_new in zip(jax.tree.leaves(rp["unc"]),
+                                  jax.tree.leaves(new["unc"])):
+        np.testing.assert_array_equal(np.asarray(leaf_old),
+                                      np.asarray(leaf_new))
+
+
+def test_ema_damps_the_step():
+    rp, _ = init_router(jax.random.PRNGKey(3), RC)
+    toks, eidx, obs = _bandit_batch(rp, seed=3)
+
+    def travel(ema):
+        step = make_router_update_step(RC, lr=0.1, ema=ema,
+                                       trainable="head")
+        new, _ = step(rp, toks, eidx, obs)
+        return sum(float(np.abs(np.asarray(a) - np.asarray(b)).sum())
+                   for a, b in zip(jax.tree.leaves(rp["head"]),
+                                   jax.tree.leaves(new["head"])))
+
+    d_plain, d_damped = travel(0.0), travel(0.75)
+    assert 0.0 < d_damped < d_plain
+    np.testing.assert_allclose(d_damped, 0.25 * d_plain, rtol=1e-4)
+
+
+# ------------------------------------- engine-level adaptation loop
+
+
+def test_engine_adapts_and_bumps_version(tiny_library, router_params):
+    clock = Clock()
+    eng = _engine(tiny_library, router_params, clock, adapt_every=8,
+                  adapt_batch=8, adapt_lr=0.05, replay_cap=64)
+    for r in _requests(32, seed=11):
+        eng.submit(r)
+    eng.run()
+    s = eng.stats.summary()["adaptation"]
+    assert s["updates"] >= 1
+    assert s["router_version"] == s["updates"] == eng.router_version
+    # one feedback sample per request whose loss was measured (a request
+    # can draw an all-zero MLM mask and contribute nothing)
+    assert 24 <= s["feedback_events"] <= 32
+    assert s["replay"] == {"len": s["feedback_events"], "cap": 64}
+    assert s["pre_err"] > 0.0 and s["post_err"] > 0.0
+
+
+def test_version_bump_invalidates_cache_no_stale_hits(tiny_library,
+                                                      router_params):
+    """After every router swap, repeated prompts must MISS and re-score:
+    a verdict scored by a superseded router version can never hit."""
+    clock = Clock()
+    eng = _engine(tiny_library, router_params, clock, adapt_every=8,
+                  adapt_batch=8, adapt_lr=0.05, replay_cap=64)
+    reqs = _requests(16, seed=13)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    v1 = eng.router_version
+    assert v1 >= 1 and eng.stats.cache_hits == 0
+    assert len(eng.cache) == 0                      # cleared on swap
+    # identical prompts again: all fresh scores against the new router
+    for r in _requests(16, seed=13):
+        eng.submit(r)
+    out = eng.run()
+    assert eng.stats.cache_hits == 0
+    assert not any(r.cached for r in out)
+    assert eng.router_version > v1                  # kept adapting
+    # and the key itself separates versions
+    toks = np.arange(32, dtype=np.int32)
+    assert (DecisionCache.key(toks, {}, ["size"], 0.0, 0)
+            != DecisionCache.key(toks, {}, ["size"], 0.0, 1))
+
+
+def test_frozen_engine_version_pinned_and_cache_warm(tiny_library,
+                                                     router_params):
+    """adapt_every=0: no updates, version stays 0, repeats hit."""
+    eng = _engine(tiny_library, router_params, Clock())
+    for r in _requests(16, seed=17):
+        eng.submit(r)
+    eng.run()
+    for r in _requests(16, seed=17):
+        eng.submit(r)
+    out = eng.run()
+    assert eng.router_version == 0
+    assert eng.stats.adapt_updates == 0
+    assert eng.stats.cache_hits == 16
+    assert all(r.cached for r in out)
+
+
+def test_adaptation_tracks_observed_loss_scale(tiny_library,
+                                               router_params):
+    """End-to-end drift-in-miniature: the untrained router predicts
+    tiny losses while the (untrained) experts' observed MLM losses sit
+    near ln(vocab) — feedback must pull the served router's predictions
+    up toward the observed scale, shrinking the replay prediction
+    error, while a frozen engine's parameters never move."""
+    probe = np.stack([r.tokens for r in _requests(16, seed=200)])
+    pred0 = np.asarray(predict_losses(router_params, RC,
+                                      {"tokens": probe}))
+
+    eng = _engine(tiny_library, router_params, Clock(), adapt_every=4,
+                  adapt_batch=16, adapt_lr=0.2, replay_cap=64,
+                  max_batch=8)
+    first_err = None
+    for round_ in range(6):
+        for r in _requests(16, seed=100 + round_):
+            r.lambdas = {}
+            eng.submit(r)
+        eng.run()
+        if first_err is None and eng.stats.adapt_updates:
+            first_err = eng.stats.adapt_pre_err
+    assert eng.stats.adapt_updates >= 6
+    assert eng.router_params is not router_params   # swapped snapshots
+    pred1 = np.asarray(predict_losses(eng.router_params, RC,
+                                      {"tokens": probe}))
+    assert pred1.mean() > pred0.mean() + 0.5        # pulled up
+    assert eng.stats.adapt_post_err < first_err     # error shrinking
+
+    frozen = _engine(tiny_library, router_params, Clock(), max_batch=8)
+    for r in _requests(16, seed=100):
+        frozen.submit(r)
+    frozen.run()
+    assert frozen.router_params is router_params    # never swapped

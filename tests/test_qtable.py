@@ -1,0 +1,123 @@
+"""Q-table construction against a NumPy oracle.
+
+``build_q_table`` is the supervision source for the router (and now,
+indirectly, the ground truth every drift/adaptation gate measures
+against), so its per-prompt masked NLL / masked accuracy math is checked
+here against an independent float64 NumPy implementation over the
+experts' actual logits, plus the domain-concatenation ordering contract
+across batches.  Deliberately hypothesis-free.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.qtable import build_q_table, mlm_accuracy
+from repro.data.batching import mlm_batch
+from repro.models.model import forward
+
+
+def _batches(rng, n_batches=3, batch=6, seq=24, vocab=64):
+    """MLM batches with distinct per-batch domain labels."""
+    out = []
+    for bi in range(n_batches):
+        toks = rng.integers(4, vocab, size=(batch, seq)).astype(np.int32)
+        mb = mlm_batch(toks, rng, 0.25, vocab)
+        mb["domain"] = np.full(batch, bi, np.int64)
+        out.append(mb)
+    return out
+
+
+def _numpy_oracle(library, batches):
+    """Float64 reimplementation of the per-prompt metrics: masked token
+    NLL via stable log-softmax and masked top-1 accuracy, straight from
+    each expert's logits."""
+    losses, accs = [], []
+    for e in library.experts:
+        el, ea = [], []
+        for b in batches:
+            jb = {"tokens": jnp.asarray(b["tokens"]),
+                  "targets": jnp.asarray(b["targets"]),
+                  "mask": jnp.asarray(b["mask"])}
+            logits = np.asarray(
+                forward(e.params, e.cfg, jb, mode="train",
+                        remat=False)[0]).astype(np.float64)
+            targets, mask = b["targets"], b["mask"].astype(np.float64)
+            m = logits.max(-1, keepdims=True)
+            logz = (m[..., 0] + np.log(np.exp(logits - m).sum(-1)))
+            B, S = targets.shape
+            gold = logits[np.arange(B)[:, None], np.arange(S)[None, :],
+                          targets]
+            denom = np.maximum(mask.sum(-1), 1.0)
+            el.append(((logz - gold) * mask).sum(-1) / denom)
+            pred = logits.argmax(-1)
+            ea.append(((pred == targets) * mask).sum(-1) / denom)
+        losses.append(np.concatenate(el))
+        accs.append(np.concatenate(ea))
+    return np.stack(losses, axis=1), np.stack(accs, axis=1)
+
+
+@pytest.fixture(scope="module")
+def qtable_setup(tiny_library):
+    rng = np.random.default_rng(42)
+    batches = _batches(rng)
+    q = build_q_table(tiny_library, batches)
+    return batches, q
+
+
+def test_qtable_shapes_and_domain_order(tiny_library, qtable_setup):
+    batches, q = qtable_setup
+    N = sum(len(b["tokens"]) for b in batches)
+    M = len(tiny_library)
+    assert q["loss"].shape == (N, M)
+    assert q["acc"].shape == (N, M)
+    # domains concatenate in batch order, rows aligned with prompts
+    np.testing.assert_array_equal(
+        q["domain"], np.concatenate([b["domain"] for b in batches]))
+
+
+def test_qtable_matches_numpy_oracle(tiny_library, qtable_setup):
+    batches, q = qtable_setup
+    loss_ref, acc_ref = _numpy_oracle(tiny_library, batches)
+    np.testing.assert_allclose(q["loss"], loss_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(q["acc"], acc_ref, rtol=1e-5, atol=1e-6)
+    # sanity: untrained-expert NLL sits near ln(vocab)
+    assert 0.5 * np.log(64) < q["loss"].mean() < 2.0 * np.log(64)
+
+
+def test_qtable_batch_rows_are_independent(tiny_library, qtable_setup):
+    """Rows for one batch equal building the table on that batch alone:
+    concatenation across batches neither reorders nor mixes prompts."""
+    batches, q = qtable_setup
+    n0 = len(batches[0]["tokens"])
+    q1 = build_q_table(tiny_library, [batches[1]])
+    np.testing.assert_array_equal(
+        q["loss"][n0:n0 + len(batches[1]["tokens"])], q1["loss"])
+    np.testing.assert_array_equal(
+        q["acc"][n0:n0 + len(batches[1]["tokens"])], q1["acc"])
+    np.testing.assert_array_equal(q1["domain"], batches[1]["domain"])
+
+
+def test_qtable_all_zero_mask_row_guard(tiny_library):
+    """A prompt with no masked positions reduces to loss 0 / acc 0 via
+    the max(denominator, 1) guard instead of dividing by zero."""
+    rng = np.random.default_rng(7)
+    b = _batches(rng, n_batches=1, batch=4)[0]
+    b["mask"][2] = 0
+    q = build_q_table(tiny_library, [b])
+    assert (q["loss"][2] == 0.0).all()
+    assert (q["acc"][2] == 0.0).all()
+    assert np.isfinite(q["loss"]).all()
+    # the other rows are untouched by the degenerate one
+    assert (q["loss"][[0, 1, 3]] > 0).all()
+
+
+def test_mlm_accuracy_selects_per_prompt_choices(tiny_library,
+                                                 qtable_setup):
+    _, q = qtable_setup
+    choices = np.argmax(q["acc"], axis=1)
+    expected = q["acc"].max(axis=1).mean()
+    assert mlm_accuracy(q, choices) == pytest.approx(expected)
+    # routing everyone to expert 0 averages column 0
+    zeros = np.zeros(len(q["acc"]), np.int64)
+    assert mlm_accuracy(q, zeros) == pytest.approx(q["acc"][:, 0].mean())
