@@ -170,7 +170,7 @@ def bench_kernels(res):
     from repro.kernels.router_score.kernel import router_score_fused
     from repro.kernels.mlstm_scan.ops import mlstm_chunkwise
     rows = []
-    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(jax.random.PRNGKey(0), 7)
 
     def timeit(fn, *args, n=3):
         fn(*args)  # compile
@@ -179,22 +179,22 @@ def bench_kernels(res):
             jax.block_until_ready(fn(*args))
         return (time.time() - t0) / n * 1e6
 
-    q = jax.random.normal(key, (2, 256, 4, 64))
-    k = jax.random.normal(key, (2, 256, 2, 64))
+    q = jax.random.normal(ks[0], (2, 256, 4, 64))
+    k = jax.random.normal(ks[1], (2, 256, 2, 64))
     us = timeit(lambda a, b: flash_attention(a, b, b, block_q=64, block_k=64),
                 q, k)
     rows.append(("kernels/flash_attention_us", us, "interpret-mode 2x256x4x64"))
 
-    emb = jax.random.normal(key, (64, 128))
-    w1 = jax.random.normal(key, (128, 128)) * 0.1
-    w2 = jax.random.normal(key, (128, 11)) * 0.1
+    emb = jax.random.normal(ks[2], (64, 128))
+    w1 = jax.random.normal(ks[3], (128, 128)) * 0.1
+    w2 = jax.random.normal(ks[4], (128, 11)) * 0.1
     us = timeit(lambda e: router_score_fused(
         e, w1, jnp.zeros(128), w2, jnp.zeros(11),
         jnp.zeros((1, 11)), jnp.zeros((64, 1)), block_b=64), emb)
     rows.append(("kernels/router_score_us", us, "interpret-mode 64x128"))
 
-    qm = jax.random.normal(key, (1, 128, 2, 32))
-    ig = jax.random.normal(key, (1, 128, 2))
+    qm = jax.random.normal(ks[5], (1, 128, 2, 32))
+    ig = jax.random.normal(ks[6], (1, 128, 2))
     st = {"C": jnp.zeros((1, 2, 32, 32)), "n": jnp.zeros((1, 2, 32)),
           "m": jnp.zeros((1, 2))}
     us = timeit(lambda a: mlstm_chunkwise(a, a, a, ig, ig + 3, st, chunk=32), qm)

@@ -1,0 +1,15 @@
+"""Delegation shim so ``python -m jaxlint`` works from the repo root.
+
+The real package lives in ``tools/jaxlint``; this module prepends
+``tools`` to ``sys.path`` and re-resolves the import so the package (an
+earlier path entry) wins over this file.
+"""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent / "tools"))
+
+if __name__ == "__main__":
+    from jaxlint.cli import main
+    raise SystemExit(main())

@@ -1,0 +1,20 @@
+"""The single designated entry point for minting PRNG keys in library
+code.
+
+``jax.random.PRNGKey(0)`` literals scattered through ``src/`` make seed
+provenance untraceable and silently correlate draws across unrelated
+call sites — jaxlint's JXL002 flags them.  Library code mints its root
+key here; callers that need independent streams split the result.
+Tests, benchmarks and scripts are entry points and may still use
+explicit literals.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def seeded_key(seed: int = 0) -> jax.Array:
+    """Root PRNG key for library-internal use (abstract init passes,
+    deterministic default initialisation).  Split before consuming."""
+    return jax.random.PRNGKey(seed)

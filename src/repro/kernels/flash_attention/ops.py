@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels import sanitize
 from repro.kernels.flash_attention.kernel import flash_attention_bhsd
 
 
@@ -13,6 +14,10 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
 
     Returns (B, S, H, hd).  GQA is handled by repeating K/V heads before
     the kernel (the kernel itself is per-(batch*head)).
+
+    Under ``REPRO_SANITIZE=1`` (eager calls only) the inputs, the window
+    bound and the output are validated with checkify — see
+    ``kernels.sanitize``.
     """
     B, S, H, hd = q.shape
     KV = k.shape[2]
@@ -25,4 +30,15 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
         to_bh(q), to_bh(k), to_bh(v), causal=causal, window=window,
         softcap=softcap, block_q=block_q, block_k=block_k,
         interpret=interpret)
-    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    out = out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    if sanitize.sanitize_enabled() and sanitize.concrete(q, k, v, out):
+        T = k.shape[1]
+
+        def _checks(q, k, v, w, out):
+            sanitize.check_finite("flash_attention", "input", q, k, v)
+            # window == 0 disables banding; valid band widths are 0..T
+            sanitize.check_in_range("flash_attention", "window", w, 0, T + 1)
+            sanitize.check_finite("flash_attention", "output", out)
+
+        sanitize.run_checks(_checks, q, k, v, jnp.asarray(window), out)
+    return out

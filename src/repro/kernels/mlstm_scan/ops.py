@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 
+from repro.kernels import sanitize
 from repro.kernels.mlstm_scan.kernel import mlstm_chunkwise_bh
 
 
@@ -11,6 +12,11 @@ def mlstm_chunkwise(q, k, v, i_pre, f_pre, state, *, chunk=64,
     """q/k/v: (B, S, H, dh) f32; i/f: (B, S, H); state: {"C","n","m"}.
 
     Returns (h (B, S, H, dh), new_state).
+
+    Under ``REPRO_SANITIZE=1`` (eager calls only) inputs, the incoming
+    stabilizer state ``m`` (the exp exponent — out of ±MLSTM_M_RANGE
+    means the renormalisation already broke down) and outputs are
+    validated with checkify — see ``kernels.sanitize``.
     """
     B, S, H, dh = q.shape
     to_bh = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
@@ -22,4 +28,18 @@ def mlstm_chunkwise(q, k, v, i_pre, f_pre, state, *, chunk=64,
     h = h.reshape(B, H, S, dh).transpose(0, 2, 1, 3)
     new_state = {"C": C1.reshape(B, H, dh, dh), "n": n1.reshape(B, H, dh),
                  "m": m1.reshape(B, H)}
+    if (sanitize.sanitize_enabled()
+            and sanitize.concrete(q, k, v, i_pre, f_pre, state, h)):
+        R = sanitize.MLSTM_M_RANGE
+
+        def _checks(q, k, v, ig, fg, m0, h, m1):
+            sanitize.check_finite("mlstm_scan", "input", q, k, v, ig, fg)
+            sanitize.check_in_range("mlstm_scan", "stabilizer state m",
+                                    m0, -R, R)
+            sanitize.check_finite("mlstm_scan", "output", h)
+            sanitize.check_in_range("mlstm_scan", "new stabilizer state m",
+                                    m1, -R, R)
+
+        sanitize.run_checks(_checks, q, k, v, i_pre, f_pre, state["m"], h,
+                            new_state["m"])
     return h, new_state

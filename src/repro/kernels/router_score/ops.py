@@ -4,7 +4,21 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels import sanitize
 from repro.kernels.router_score.kernel import router_score_fused
+
+
+def router_route_checks(pred, choice, emb, head_params, lambdas) -> None:
+    """Trace-level sanitizer conditions for one fused routing decision.
+
+    Callers evaluating under their own ``checkify`` (the engine's
+    sanitized decide path) reuse this; eager callers get it through
+    ``router_route`` when ``REPRO_SANITIZE=1``."""
+    M = head_params["w2"].shape[1]
+    sanitize.check_finite("router_score", "input", emb, lambdas,
+                          *head_params.values())
+    sanitize.check_finite("router_score", "predicted losses", pred)
+    sanitize.check_in_range("router_score", "expert choice", choice, 0, M)
 
 
 def router_head(emb, head_params, interpret=None):
@@ -27,9 +41,14 @@ def router_route(emb, head_params, constraints, lambdas, *, block_b=128,
     constraints: (n_c, M) np/jnp; lambdas: (B, n_c).
     Returns (pred_losses (B, M) f32, choice (B,) int32).
     """
+    lam = jnp.asarray(lambdas, jnp.float32)
     pred, choice = router_score_fused(
         emb, head_params["w1"], head_params["b1"], head_params["w2"],
         head_params["b2"], jnp.asarray(constraints, jnp.float32),
-        jnp.asarray(lambdas, jnp.float32), block_b=block_b,
-        interpret=interpret)
+        lam, block_b=block_b, interpret=interpret)
+    if sanitize.sanitize_enabled() and sanitize.concrete(emb, pred, choice):
+        sanitize.run_checks(
+            lambda p, c, e, lm: router_route_checks(p, c, e, head_params,
+                                                    lm),
+            pred, choice, emb, lam)
     return pred, choice

@@ -1,0 +1,78 @@
+"""Runtime sanitizer for the Pallas kernels: checkify-backed NaN/inf and
+out-of-range checks, off by default.
+
+Enable with ``REPRO_SANITIZE=1`` in the environment, ``--sanitize`` on
+``launch/serve.py``, or programmatically with ``set_sanitize(True)``.
+With the switch off every wrapper returns the exact same jit'd program
+as before — the checks are never traced, so the fast path costs nothing.
+
+Design constraint: on the pinned jax, ``checkify.checkify`` cannot
+transform a function *containing* ``pl.pallas_call`` (the error carry
+gets woven into the kernel's internal stateful jaxpr and the transform
+rejects it).  The sanitizer therefore never wraps a kernel directly —
+it runs the kernel un-transformed and evaluates an explicit pre/post
+condition function (inputs + outputs) under ``checkify``; that is also
+why ``ERRORS`` is ``user_checks`` only (automatic ``float_checks``
+instrumentation hits the same wall).  Checks fire at *eager* call
+boundaries: a sanitized wrapper invoked inside an outer ``jax.jit``
+skips its checks (``concrete`` guard) — the caller owns sanitization
+there, which is how ``serving.engine`` wires its decide path.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import checkify
+
+ERRORS = checkify.user_checks
+
+#: exp(m) over/underflows f32 beyond ~88; a stabilizer state outside
+#: this band means the scan's renormalisation has already broken down.
+MLSTM_M_RANGE = 80.0
+
+_override: bool | None = None
+
+
+def set_sanitize(on: bool | None) -> None:
+    """Force the sanitizer on/off for this process (None: back to env)."""
+    global _override
+    _override = on
+
+
+def sanitize_enabled() -> bool:
+    if _override is not None:
+        return _override
+    return os.environ.get("REPRO_SANITIZE", "").strip().lower() in (
+        "1", "true", "on", "yes")
+
+
+def concrete(*trees) -> bool:
+    """True when no leaf is a tracer — checks only run at eager
+    boundaries (see module docstring)."""
+    return not any(isinstance(leaf, jax.core.Tracer)
+                   for leaf in jax.tree.leaves(trees))
+
+
+# ---------------------------------------------------- trace-level checks
+
+def check_finite(kernel: str, label: str, *arrays) -> None:
+    ok = jnp.bool_(True)
+    for a in arrays:
+        ok = ok & jnp.isfinite(jnp.asarray(a)).all()
+    checkify.check(ok, f"{kernel}: non-finite {label}")
+
+
+def check_in_range(kernel: str, label: str, x, lo, hi) -> None:
+    x = jnp.asarray(x)
+    ok = ((x >= lo) & (x < hi)).all()
+    checkify.check(ok, f"{kernel}: {label} out of range [{lo}, {hi})")
+
+
+def run_checks(check_fn, *arrays) -> None:
+    """Evaluate a trace-level check function eagerly and throw on the
+    first failed check (``checkify.JaxRuntimeError``)."""
+    err, _ = checkify.checkify(check_fn, errors=ERRORS)(*arrays)
+    err.throw()

@@ -122,9 +122,17 @@ def main():
     ap.add_argument("--drift-domains", type=str, default="github,dm_math",
                     help="comma list of domains the post-shift mix "
                          "concentrates on")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="enable the checkify sanitizer (NaN/inf + OOB "
+                         "checks on the routing path; same switch as "
+                         "REPRO_SANITIZE=1)")
     args = ap.parse_args()
     if args.adapt_every > 0 and args.replay_cap <= 0:
         ap.error("--adapt-every needs a replay buffer (--replay-cap >= 1)")
+
+    if args.sanitize:
+        from repro.kernels import sanitize
+        sanitize.set_sanitize(True)
 
     from repro.core import experiment as ex
     from repro.core.objective import recency_constraint, size_constraint
@@ -211,6 +219,7 @@ def main():
         "discipline": "fifo-drain" if args.fifo else "continuous-batching",
         "cascade_threshold": args.cascade,
         "adapt_every": args.adapt_every,
+        "sanitize": args.sanitize,
         "drift_after": args.drift_after,
         "arrival_rate": args.arrival_rate,
         "wall_s": round(dt, 2),

@@ -27,6 +27,7 @@ def train_arch(arch: str, steps: int, batch: int, seq: int, verbose=True):
     import jax.numpy as jnp
 
     from repro.configs import get_config
+    from repro.core.rngs import seeded_key
     from repro.data.batching import mlm_batch
     from repro.data.corpus import DomainCorpus
     from repro.launch.mesh import make_host_mesh
@@ -42,7 +43,7 @@ def train_arch(arch: str, steps: int, batch: int, seq: int, verbose=True):
     built = build_train_step(cfg, shape, mesh, PerfKnobs(donate=False),
                              lr=1e-3)
 
-    key = jax.random.PRNGKey(0)
+    key = seeded_key(0)
     params, _ = init_model(key, cfg)
     opt = adamw_init(params)
     opt = {"step": opt.step, "mu": opt.mu, "nu": opt.nu}

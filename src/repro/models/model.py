@@ -44,7 +44,9 @@ def init_model(key, cfg: ModelConfig):
         _box["logical"] = l
         return p
 
-    jax.eval_shape(_unit_params_only, jax.random.PRNGKey(0))
+    from repro.core.rngs import seeded_key  # local: core imports models
+
+    jax.eval_shape(_unit_params_only, seeded_key(0))
     unit_logical = _box["logical"]
     logical["units"] = jax.tree.map(
         lambda ax: ("layers",) + ax, unit_logical,
@@ -77,7 +79,9 @@ def init_model_logical(cfg: ModelConfig):
         box["l"] = l
         return p
 
-    abs_params = jax.eval_shape(f, jax.random.PRNGKey(0))
+    from repro.core.rngs import seeded_key  # local: core imports models
+
+    abs_params = jax.eval_shape(f, seeded_key(0))
     return abs_params, box["l"]
 
 

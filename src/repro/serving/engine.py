@@ -100,6 +100,7 @@ from repro.core.router import (RouterConfig, VersionedParams,
                                router_embed)
 from repro.core.training import (make_router_update_step,
                                  router_prediction_error)
+from repro.kernels import sanitize
 from repro.kernels.router_score import ops as rs_ops
 from repro.models.model import forward
 from repro.serving.cache import DecisionCache
@@ -306,8 +307,17 @@ class TryageEngine:
         if adapt_every > 0:
             self._update_step = make_router_update_step(
                 rc, lr=adapt_lr, ema=adapt_ema, trainable=adapt_trainable)
-            self._pred_err = jax.jit(
-                lambda p, t, e, o: router_prediction_error(p, rc, t, e, o))
+
+            def _adapt_step(p, t, e, o):
+                # pre/post prediction error fused with the update into
+                # one jit'd program: one device->host pull per adaptation
+                # step instead of two blocking float() syncs (JXL001)
+                pre = router_prediction_error(p, rc, t, e, o)
+                new_p, _ = self._update_step(p, t, e, o)
+                post = router_prediction_error(new_p, rc, t, e, o)
+                return new_p, jnp.stack([pre, post])
+
+            self._adapt_step = jax.jit(_adapt_step)
 
         # the staged pipeline: Route -> Cascade (admission half) and
         # Execute -> Feedback (flush half), composed over this engine's
@@ -409,11 +419,15 @@ class TryageEngine:
                     [lam, np.zeros((Bp - B, lam.shape[1]), lam.dtype)])
             pred, choice = self._decide(self.router_params,
                                         jnp.asarray(toks), jnp.asarray(lam))
+            if sanitize.sanitize_enabled():
+                self._sanitize_batch(toks, pred, choice)
             pred = np.asarray(pred)[:B]
             choice = np.asarray(choice)[:B]
         else:
-            pred = np.asarray(
-                self._score(self.router_params, jnp.asarray(toks)))
+            pred_dev = self._score(self.router_params, jnp.asarray(toks))
+            if sanitize.sanitize_enabled():
+                self._sanitize_batch(toks, pred_dev)
+            pred = np.asarray(pred_dev)
             # score = L-hat + sum_j lambda_j C_j, argmin on the host
             scores = pred.copy()
             for c in self.constraints:
@@ -423,6 +437,28 @@ class TryageEngine:
         self.stats.router_time_s += self._now() - t0
         self.stats.router_batches += 1
         return pred, choice
+
+    def _sanitize_batch(self, toks, pred, choice=None):
+        """``REPRO_SANITIZE``: validate one scored batch.  Token ids are
+        range-checked host-side (they arrive as numpy); router outputs
+        are checked under checkify (see ``kernels.sanitize`` for why the
+        checks wrap the jit boundary instead of the kernel)."""
+        vocab = self.rc.vocab_size
+        if toks.min() < 0 or toks.max() >= vocab:
+            raise ValueError(
+                f"router_score: token id out of range [0, {vocab})")
+        M = self.rc.n_models
+
+        def _checks(p, c):
+            sanitize.check_finite("router_score", "predicted losses", p)
+            if c is not None:
+                sanitize.check_in_range("router_score", "expert choice",
+                                        c, 0, M)
+
+        if choice is None:
+            sanitize.run_checks(lambda p: _checks(p, None), pred)
+        else:
+            sanitize.run_checks(_checks, pred, choice)
 
     def _sigma_batch(self, reqs: list[Request]) -> np.ndarray:
         """Per-expert predictive uncertainty sigma (B, M) for a batch —
@@ -523,18 +559,30 @@ class TryageEngine:
                                                  self._adapt_rng)
             jt, je, jo = (jnp.asarray(toks), jnp.asarray(eidx),
                           jnp.asarray(obs))
-            pre = float(self._pred_err(self.router_params, jt, je, jo))
-            new_params, _ = self._update_step(self.router_params,
-                                              jt, je, jo)
-            post = float(self._pred_err(new_params, jt, je, jo))
+            new_params, errs = self._adapt_step(self.router_params,
+                                                jt, je, jo)
+            errs = np.asarray(errs)  # one sync for both error scalars
             self._router = self._router.swap(new_params)
             if self.cache is not None:
                 self.cache.clear()
+            self._assert_cache_version()
             self.stats.adapt_updates += 1
             self.stats.router_version = self._router.version
-            self.stats.adapt_pre_err = pre
-            self.stats.adapt_post_err = post
+            self.stats.adapt_pre_err = float(errs[0])
+            self.stats.adapt_post_err = float(errs[1])
             self.stats.adapt_time_s += self._now() - t0
+
+    def _assert_cache_version(self):
+        """Sanitizer invariant, checked after every swap: no surviving
+        decision-cache entry may carry a router version other than the
+        live snapshot's — a stale hit would serve verdicts scored by
+        superseded parameters."""
+        if self.cache is None:
+            return
+        stale = self.cache.stale_versions(self._router.version)
+        assert not stale, (
+            f"decision cache holds entries for router version(s) "
+            f"{sorted(stale)} but version {self._router.version} is live")
 
     # --------------------------------------------------- expert executor
 

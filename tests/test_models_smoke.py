@@ -23,9 +23,10 @@ ARCHS_TRAIN = [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
 
 def _batch(cfg, key, B=2, S=32):
     if cfg.is_encoder or cfg.family in ("vlm", "audio"):
+        ke, kt = jax.random.split(key)
         return {
-            "embeds": jax.random.normal(key, (B, S, cfg.d_model), jnp.float32),
-            "targets": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+            "embeds": jax.random.normal(ke, (B, S, cfg.d_model), jnp.float32),
+            "targets": jax.random.randint(kt, (B, S), 0, cfg.vocab_size),
             "mask": jnp.ones((B, S), jnp.int32),
         }
     toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)

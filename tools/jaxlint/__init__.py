@@ -1,0 +1,19 @@
+"""jaxlint — AST-based static analysis for JAX/Pallas hazards.
+
+The serving stack routes every request through jit boundaries and Pallas
+kernels; the hazards this tool hunts (host-device syncs, PRNG key reuse,
+impure jit bodies, recompilation traps, BlockSpec/grid mismatches) are
+silent at runtime until they cost throughput or correctness.  Run it as
+
+    python -m jaxlint src tests benchmarks
+
+from the repo root (a delegation shim lives at the root; the package
+itself is importable with ``tools`` on ``sys.path``).  Suppress a single
+finding with an inline ``# jaxlint: disable=<CODE>`` comment on the
+flagged line.
+"""
+
+from jaxlint.core import Finding, RULES, analyze_paths
+
+__version__ = "0.1.0"
+__all__ = ["Finding", "RULES", "analyze_paths", "__version__"]

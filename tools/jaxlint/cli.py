@@ -1,0 +1,43 @@
+"""jaxlint CLI: ``python -m jaxlint [paths ...]``.
+
+Exit codes: 0 clean, 1 findings, 2 parse/usage errors.  Suppressed
+findings never affect the exit code but are printed and counted in the
+JSON report (``--report``), so CI can hold the suppression budget.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from jaxlint.core import analyze_paths
+from jaxlint.report import render_rules, render_text, write_json
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="jaxlint",
+        description="AST-based static analysis for JAX/Pallas hazards")
+    ap.add_argument("paths", nargs="*", default=["src", "tests",
+                                                 "benchmarks"],
+                    help="files or directories to scan (default: "
+                         "src tests benchmarks)")
+    ap.add_argument("--report", metavar="FILE",
+                    help="write a JSON report (CI artifact)")
+    ap.add_argument("--tests-dir", default="tests",
+                    help="where PLL002 looks for parity tests")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(render_rules())
+        return 0
+
+    active, suppressed, errors, n_files = analyze_paths(
+        args.paths, tests_dir=args.tests_dir)
+    print(render_text(active, suppressed, errors, n_files))
+    if args.report:
+        write_json(args.report, active, suppressed, errors, n_files)
+    if errors:
+        return 2
+    return 1 if active else 0

@@ -1,0 +1,164 @@
+"""Analyzer infrastructure: findings, rule registry, suppressions, driving.
+
+A *rule* is a callable ``(FileContext, ModuleIndex) -> list[Finding]``
+registered in ``RULES`` with a one-line description and fix hint.  The
+driver parses each file once, builds one ``ModuleIndex`` (the shared
+jit/dataflow view in ``dataflow.py``), runs every per-file rule, then
+runs the structural pass (PLL002) over the whole scanned set.
+
+Suppression is line-scoped: a ``# jaxlint: disable=CODE[,CODE]`` comment
+on the flagged line silences matching findings (``disable=all`` silences
+every code).  Suppressed findings are still counted and reported so CI
+can enforce a budget.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+
+SUPPRESS_RE = re.compile(r"#\s*jaxlint:\s*disable=([A-Za-z0-9_,\s]+)")
+
+#: code -> (one-line description, one-line fix hint)
+RULES: dict[str, tuple[str, str]] = {
+    "JXL001": (
+        "host-device sync inside a jit'd function or the serving hot path",
+        "keep values on device; batch device->host pulls into one "
+        "np.asarray outside jit",
+    ),
+    "JXL002": (
+        "PRNG key reuse, or bare PRNGKey literal in library code",
+        "jax.random.split before each consumption; mint seeds via "
+        "repro.core.rngs.seeded_key",
+    ),
+    "JXL003": (
+        "Python side effect under jax.jit",
+        "jit'd code must be pure: return values instead of printing or "
+        "mutating closed-over state",
+    ),
+    "JXL004": (
+        "recompilation hazard: dynamic/unhashable Python argument to a "
+        "jit'd callable",
+        "declare the argument in static_argnames or pass device arrays",
+    ),
+    "PLL001": (
+        "Pallas kernel hazard: unguarded grid division, int literal mixed "
+        "with pl.ds, or interpret not routed through default_interpret",
+        "guard grid divisors with an assert or padding, index leading axes "
+        "with pl.ds(i, 1), call kernels.default_interpret(interpret)",
+    ),
+    "PLL002": (
+        "kernel package missing its ref.py or a parity test",
+        "every kernels/*/kernel.py ships a sibling ref.py and a test that "
+        "checks the kernel against it",
+    ),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    @property
+    def hint(self) -> str:
+        return RULES[self.code][1]
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.code} "
+                f"{self.message} [hint: {self.hint}]")
+
+
+class FileContext:
+    """One parsed source file plus its path scopes and suppressions."""
+
+    def __init__(self, path: pathlib.Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.tree = ast.parse(source, filename=rel)
+        self.parts = tuple(pathlib.PurePosixPath(rel.replace("\\", "/")).parts)
+        # line -> set of suppressed codes (or {"ALL"})
+        self.suppressions: dict[int, set[str]] = {}
+        for i, text in enumerate(source.splitlines(), 1):
+            m = SUPPRESS_RE.search(text)
+            if m:
+                self.suppressions[i] = {
+                    c.strip().upper()
+                    for c in m.group(1).split(",") if c.strip()
+                }
+
+    # path scopes ------------------------------------------------------
+    @property
+    def in_lib(self) -> bool:
+        """Library code: anything under a ``src`` directory."""
+        return "src" in self.parts[:-1]
+
+    @property
+    def in_hot_path(self) -> bool:
+        """The serving hot path: src/**/serving/*."""
+        return self.in_lib and "serving" in self.parts[:-1]
+
+    @property
+    def in_kernels(self) -> bool:
+        """Pallas kernel packages: src/**/kernels/*."""
+        return self.in_lib and "kernels" in self.parts[:-1]
+
+    def suppressed(self, finding: Finding) -> bool:
+        codes = self.suppressions.get(finding.line)
+        return bool(codes) and (finding.code in codes or "ALL" in codes)
+
+
+def iter_py_files(roots: list[str]) -> list[pathlib.Path]:
+    seen: set[pathlib.Path] = set()
+    for root in roots:
+        p = pathlib.Path(root)
+        if p.is_file() and p.suffix == ".py":
+            seen.add(p.resolve())
+        elif p.is_dir():
+            seen.update(f.resolve() for f in p.rglob("*.py"))
+    return sorted(seen)
+
+
+def analyze_paths(roots: list[str], tests_dir: str = "tests"):
+    """Run every rule over ``roots``.
+
+    Returns ``(active, suppressed, errors, n_files)`` where ``errors``
+    are files that failed to parse (reported, never silently skipped).
+    """
+    from jaxlint.dataflow import ModuleIndex
+    from jaxlint.rules_jax import JAX_RULES
+    from jaxlint.rules_pallas import PALLAS_RULES, structural_pass
+
+    cwd = pathlib.Path.cwd().resolve()
+    active: list[Finding] = []
+    suppressed: list[Finding] = []
+    errors: list[str] = []
+    contexts: list[FileContext] = []
+    for path in iter_py_files(roots):
+        try:
+            rel = str(path.relative_to(cwd))
+        except ValueError:
+            rel = str(path)
+        try:
+            source = path.read_text()
+            ctx = FileContext(path, rel, source)
+        except (SyntaxError, UnicodeDecodeError, OSError) as e:
+            errors.append(f"{rel}: {type(e).__name__}: {e}")
+            continue
+        contexts.append(ctx)
+        idx = ModuleIndex(ctx.tree)
+        findings: list[Finding] = []
+        for rule in (*JAX_RULES, *PALLAS_RULES):
+            findings.extend(rule(ctx, idx))
+        for f in findings:
+            (suppressed if ctx.suppressed(f) else active).append(f)
+    active.extend(structural_pass(contexts, tests_dir))
+    key = lambda f: (f.path, f.line, f.col, f.code)  # noqa: E731
+    return (sorted(set(active), key=key), sorted(set(suppressed), key=key),
+            errors, len(contexts))

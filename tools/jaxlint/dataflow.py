@@ -1,0 +1,180 @@
+"""Module-level jit/dataflow indexing shared by the JAX rules.
+
+``ModuleIndex`` answers two questions the rules keep asking:
+
+* which function bodies trace under ``jax.jit`` — decorator forms
+  (``@jax.jit``, ``@functools.partial(jax.jit, static_argnames=...)``),
+  call forms (``jax.jit(fn)``, ``jax.jit(lambda ...)``,
+  ``jax.jit(functools.partial(self.method, ...))``), in any of which the
+  referenced def's body is traced;
+* which *call sites* invoke a jit'd callable — a name or attribute that
+  was assigned from a ``jax.jit(...)`` expression (``f = jax.jit(...)``,
+  ``self._decide = jax.jit(...)``), or a def decorated with jit.
+
+Everything is a static heuristic over one module: no imports are
+resolved, so a jit callable passed across modules is invisible.  That is
+the deliberate trade — zero false positives from aliasing beat
+exhaustive recall for a lint gate.
+"""
+
+from __future__ import annotations
+
+import ast
+
+FunctionNode = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def endpoint(node: ast.AST) -> str | None:
+    """Rightmost identifier of a Name/Attribute chain, else None."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def root_name(node: ast.AST) -> str | None:
+    """Leftmost Name of an attribute/subscript/call chain, else None."""
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+        node = node.func if isinstance(node, ast.Call) else node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def is_jax_jit(node: ast.AST) -> bool:
+    if isinstance(node, ast.Attribute) and node.attr == "jit":
+        return endpoint(node.value) == "jax"
+    return isinstance(node, ast.Name) and node.id == "jit"
+
+
+def _is_partial(node: ast.AST) -> bool:
+    return endpoint(node) == "partial"
+
+
+def static_names(call: ast.Call) -> set[str]:
+    """static_argnames declared on a jit/partial call (str or tuple)."""
+    out: set[str] = set()
+    for kw in call.keywords:
+        if kw.arg != "static_argnames":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, str):
+            out.add(v.value)
+        elif isinstance(v, (ast.Tuple, ast.List)):
+            out.update(e.value for e in v.elts
+                       if isinstance(e, ast.Constant)
+                       and isinstance(e.value, str))
+    return out
+
+
+def bound_names(fn: ast.AST) -> set[str]:
+    """Names bound inside a function: params + every store target."""
+    out: set[str] = set()
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        a = fn.args
+        for arg in (*a.posonlyargs, *a.args, *a.kwonlyargs):
+            out.add(arg.arg)
+        if a.vararg:
+            out.add(a.vararg.arg)
+        if a.kwarg:
+            out.add(a.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            out.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)) and node is not fn:
+            out.add(node.name)
+        elif isinstance(node, ast.ExceptHandler) and node.name:
+            out.add(node.name)
+    return out
+
+
+class ModuleIndex:
+    """Jit view of one module (see module docstring)."""
+
+    def __init__(self, tree: ast.Module):
+        self.tree = tree
+        #: function node -> static_argnames declared for it
+        self.jit_functions: dict[ast.AST, set[str]] = {}
+        #: bare names whose call sites are jit'd (jit-decorated defs and
+        #: ``f = jax.jit(...)`` locals)
+        self.jit_names: set[str] = set()
+        #: attribute names assigned ``<obj>.<attr> = jax.jit(...)``
+        self.jit_attr_names: set[str] = set()
+        self._defs: dict[str, list[ast.AST]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._defs.setdefault(node.name, []).append(node)
+        self._scan_decorators()
+        self._scan_jit_calls()
+        self._scan_assignments()
+
+    # ------------------------------------------------------------------
+    def _mark(self, fn: ast.AST, statics: set[str]) -> None:
+        self.jit_functions.setdefault(fn, set()).update(statics)
+
+    def _scan_decorators(self) -> None:
+        for defs in self._defs.values():
+            for fn in defs:
+                for dec in fn.decorator_list:
+                    if is_jax_jit(dec):
+                        self._mark(fn, set())
+                        self.jit_names.add(fn.name)
+                    elif isinstance(dec, ast.Call):
+                        if is_jax_jit(dec.func):
+                            self._mark(fn, static_names(dec))
+                            self.jit_names.add(fn.name)
+                        elif (_is_partial(dec.func) and dec.args
+                              and is_jax_jit(dec.args[0])):
+                            self._mark(fn, static_names(dec))
+                            self.jit_names.add(fn.name)
+
+    def _scan_jit_calls(self) -> None:
+        for node in ast.walk(self.tree):
+            if not (isinstance(node, ast.Call) and is_jax_jit(node.func)
+                    and node.args):
+                continue
+            statics = static_names(node)
+            target = node.args[0]
+            if isinstance(target, ast.Lambda):
+                self._mark(target, statics)
+                continue
+            if (isinstance(target, ast.Call) and _is_partial(target.func)
+                    and target.args):
+                target = target.args[0]
+            name = endpoint(target)
+            # the *def body* traces under jit; its bare name stays unjit'd
+            # (callers go through the jit'd alias, e.g. self._decide)
+            for fn in self._defs.get(name or "", []):
+                self._mark(fn, statics)
+
+    def _scan_assignments(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets, value = [node.target], node.value
+            else:
+                continue
+            if not (isinstance(value, ast.Call) and is_jax_jit(value.func)):
+                continue
+            for t in targets:
+                if isinstance(t, ast.Name):
+                    self.jit_names.add(t.id)
+                elif isinstance(t, ast.Attribute):
+                    self.jit_attr_names.add(t.attr)
+
+    # ------------------------------------------------------------------
+    def is_jit_call(self, call: ast.Call) -> bool:
+        """Does this call site invoke a known jit'd callable?"""
+        f = call.func
+        if isinstance(f, ast.Name):
+            return f.id in self.jit_names
+        if isinstance(f, ast.Attribute):
+            return f.attr in self.jit_attr_names
+        return False
+
+    def all_static_names(self) -> set[str]:
+        out: set[str] = set()
+        for statics in self.jit_functions.values():
+            out |= statics
+        return out

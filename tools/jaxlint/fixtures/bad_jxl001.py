@@ -1,0 +1,33 @@
+"""Fixture: host-device syncs inside jit'd functions (JXL001)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def decorated_sync(x):
+    s = float(jnp.sum(x))          # JXL001: float() under jit
+    return x * s
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def partial_sync(x, k=2):
+    m = jnp.max(x).item()          # JXL001: .item() under jit
+    host = np.asarray(x)           # JXL001: np.asarray under jit
+    return x * m + host.shape[0] * k
+
+
+def _body(x):
+    return int(jnp.argmax(x))      # JXL001: int() under jit via jax.jit(_body)
+
+
+scorer = jax.jit(_body)
+
+
+@jax.jit
+def clean(x):
+    n = int(x.shape[0])            # shapes are host ints — not flagged
+    return x / n

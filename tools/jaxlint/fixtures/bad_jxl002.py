@@ -1,0 +1,26 @@
+"""Fixture: PRNG key reuse (JXL002a)."""
+
+import jax
+
+
+def double_draw(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.normal(key, (4,))   # JXL002: same key consumed twice
+    return a + b
+
+
+def loop_draw(key, n):
+    total = 0.0
+    for _ in range(n):
+        total += jax.random.uniform(key)   # JXL002: key reused per iteration
+    return total
+
+
+def clean(key):
+    k1, k2 = jax.random.split(key)
+    return jax.random.normal(k1, (4,)) + jax.random.normal(k2, (4,))
+
+
+def clean_loop(key, n):
+    ks = jax.random.split(key, n)
+    return sum(jax.random.uniform(ks[i]) for i in range(n))

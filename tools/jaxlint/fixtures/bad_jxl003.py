@@ -1,0 +1,22 @@
+"""Fixture: Python side effects under jax.jit (JXL003)."""
+
+import jax
+import jax.numpy as jnp
+
+TRACE_LOG = []
+STATE = {"count": 0}
+
+
+@jax.jit
+def noisy(x):
+    print("tracing", x.shape)        # JXL003: print under jit
+    TRACE_LOG.append(x.shape)        # JXL003: closed-over list mutation
+    STATE["count"] = 1               # JXL003: closed-over dict mutation
+    return jnp.tanh(x)
+
+
+@jax.jit
+def clean(x):
+    scales = []
+    scales.append(2.0)               # local list — not flagged
+    return x * scales[0]

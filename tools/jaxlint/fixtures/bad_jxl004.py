@@ -1,0 +1,27 @@
+"""Fixture: recompilation hazards at jit boundaries (JXL004)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branchy(x, causal=True, mode="fast"):   # JXL004 x2: non-static defaults
+    if causal:
+        x = jnp.tril(x)
+    return x if mode == "fast" else x * 2
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "mode"))
+def branchy_ok(x, causal=True, mode="fast"):    # statics declared — clean
+    if causal:
+        x = jnp.tril(x)
+    return x if mode == "fast" else x * 2
+
+
+step = jax.jit(lambda p, b: p + b["x"])
+
+
+def run(p):
+    return step(p, {"x": jnp.ones(3)})   # JXL004: dict literal to jit call

@@ -1,0 +1,26 @@
+"""Fixture: a Pallas kernel violating every PLL001 sub-check (and
+PLL002 — no sibling ref.py, no parity test)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _body(x_ref, o_ref):
+    i = pl.program_id(0)
+    # PLL001: int literal mixed with pl.ds in the index tuple
+    row = pl.load(x_ref, (0, pl.ds(i * 8, 8)))
+    o_ref[0, pl.ds(i * 8, 8)] = row * 2.0
+
+
+@jax.jit
+def double_rows(x, block=8):
+    n = x.shape[1]
+    # PLL001: grid divides by `block` but nothing guards n % block;
+    # PLL001: interpret never routed through kernels.default_interpret
+    return pl.pallas_call(
+        _body,
+        grid=(n // block,),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,19 @@
+"""Fixture: hot-path scalar pulls and bare PRNGKey in library code.
+
+Lives under a ``src/repro/serving`` subtree so the path-scoped halves of
+JXL001 (serving hot path) and JXL002 (library code) fire.
+"""
+
+import jax
+
+
+class MiniEngine:
+    def __init__(self, rc):
+        self._pred_err = jax.jit(lambda p, t: (p * t).sum())
+        self.key = jax.random.PRNGKey(0)   # JXL002: bare literal in library
+
+    def step(self, params, toks):
+        # JXL001 x2: blocking scalar pull per call in the hot path
+        pre = float(self._pred_err(params, toks))
+        post = float(self._pred_err(params, toks + 1))
+        return pre, post

@@ -1,0 +1,55 @@
+"""Rendering: human-readable text and the JSON artifact CI uploads."""
+
+from __future__ import annotations
+
+import collections
+import json
+import pathlib
+
+from jaxlint.core import RULES, Finding
+
+
+def render_text(active: list[Finding], suppressed: list[Finding],
+                errors: list[str], n_files: int) -> str:
+    lines = [f.format() for f in active]
+    for f in suppressed:
+        lines.append(f"{f.path}:{f.line}:{f.col}: {f.code} suppressed: "
+                     f"{f.message}")
+    for e in errors:
+        lines.append(f"error: {e}")
+    counts = collections.Counter(f.code for f in active)
+    by_code = ", ".join(f"{c}={n}" for c, n in sorted(counts.items()))
+    tail = (f"jaxlint: {len(active)} finding(s)"
+            + (f" [{by_code}]" if by_code else "")
+            + f", {len(suppressed)} suppressed, {len(errors)} parse "
+              f"error(s), {n_files} file(s) scanned")
+    lines.append(tail)
+    return "\n".join(lines)
+
+
+def render_rules() -> str:
+    lines = ["jaxlint rules:"]
+    for code, (desc, hint) in RULES.items():
+        lines.append(f"  {code}  {desc}")
+        lines.append(f"          fix: {hint}")
+    return "\n".join(lines)
+
+
+def _as_dict(f: Finding) -> dict:
+    return {"path": f.path, "line": f.line, "col": f.col, "code": f.code,
+            "message": f.message, "hint": f.hint}
+
+
+def write_json(path: str, active: list[Finding], suppressed: list[Finding],
+               errors: list[str], n_files: int) -> None:
+    counts = collections.Counter(f.code for f in active)
+    payload = {
+        "findings": [_as_dict(f) for f in active],
+        "suppressed": [_as_dict(f) for f in suppressed],
+        "errors": errors,
+        "counts": dict(sorted(counts.items())),
+        "files_scanned": n_files,
+        "rules": {c: {"description": d, "hint": h}
+                  for c, (d, h) in RULES.items()},
+    }
+    pathlib.Path(path).write_text(json.dumps(payload, indent=2) + "\n")

@@ -1,0 +1,308 @@
+"""JAX rules: JXL001 (host sync), JXL002 (PRNG discipline), JXL003
+(side effects under jit), JXL004 (recompilation hazards).
+
+Each rule is ``(FileContext, ModuleIndex) -> list[Finding]``.  The rules
+lean on path scoping from ``FileContext``: the hot-path half of JXL001
+only fires under ``src/**/serving``, the bare-PRNGKey half of JXL002
+only fires in library code (``src/**``) — tests, benchmarks and scripts
+are designated entry points where a literal seed is the whole point.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from jaxlint.core import FileContext, Finding
+from jaxlint.dataflow import ModuleIndex, bound_names, endpoint, root_name
+
+NP_ALIASES = ("np", "numpy", "onp")
+
+
+def _finding(ctx: FileContext, node: ast.AST, code: str,
+             message: str) -> Finding:
+    return Finding(ctx.rel, node.lineno, node.col_offset, code, message)
+
+
+# ----------------------------------------------------------- JXL001
+
+def _is_host_scalar_already(arg: ast.AST) -> bool:
+    """int()/float() of shapes, len() or literals is host-side already."""
+    if isinstance(arg, ast.Constant):
+        return True
+    if isinstance(arg, ast.Subscript):
+        v = arg.value
+        return isinstance(v, ast.Attribute) and v.attr == "shape"
+    if isinstance(arg, ast.Attribute):
+        return arg.attr in ("shape", "ndim", "size")
+    if isinstance(arg, ast.Call):
+        return endpoint(arg.func) in ("len", "range")
+    return False
+
+
+def _sync_kind(node: ast.AST) -> str | None:
+    """Classify a node as a host-device sync expression, if it is one."""
+    if not isinstance(node, ast.Call):
+        return None
+    f = node.func
+    if (isinstance(f, ast.Name) and f.id in ("float", "int")
+            and len(node.args) == 1
+            and not _is_host_scalar_already(node.args[0])):
+        return f"{f.id}()"
+    if isinstance(f, ast.Attribute):
+        if f.attr == "item" and not node.args:
+            return ".item()"
+        if (f.attr in ("asarray", "array")
+                and isinstance(f.value, ast.Name)
+                and f.value.id in NP_ALIASES):
+            return f"{f.value.id}.{f.attr}()"
+    return None
+
+
+def check_jxl001(ctx: FileContext, idx: ModuleIndex) -> list[Finding]:
+    out: list[Finding] = []
+    seen: set[tuple[int, int]] = set()
+    # (a) any sync expression inside a function body that traces under jit
+    for fn in idx.jit_functions:
+        for node in ast.walk(fn):
+            kind = _sync_kind(node)
+            if kind and (node.lineno, node.col_offset) not in seen:
+                seen.add((node.lineno, node.col_offset))
+                out.append(_finding(
+                    ctx, node, "JXL001",
+                    f"{kind} forces a host-device sync inside a jit'd "
+                    "function"))
+    # (b) serving hot path: a blocking scalar pull directly off a jit call
+    if ctx.in_hot_path:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            inner = None
+            if (isinstance(f, ast.Name) and f.id in ("float", "int")
+                    and len(node.args) == 1):
+                inner = node.args[0]
+            elif (isinstance(f, ast.Attribute) and f.attr == "item"
+                  and not node.args):
+                inner = f.value
+            if (isinstance(inner, ast.Call) and idx.is_jit_call(inner)
+                    and (node.lineno, node.col_offset) not in seen):
+                seen.add((node.lineno, node.col_offset))
+                out.append(_finding(
+                    ctx, node, "JXL001",
+                    "blocking scalar pull of a jit output in the serving "
+                    "hot path"))
+    return out
+
+
+# ----------------------------------------------------------- JXL002
+
+RANDOM_BASES = ("jax.random", "jrandom", "jr")
+NONCONSUMING = {"split", "fold_in", "PRNGKey", "key", "key_data",
+                "wrap_key_data", "clone"}
+
+
+def _consumed_key(call: ast.Call) -> ast.AST | None:
+    """The key expression consumed by a jax.random sampler call."""
+    f = call.func
+    if not isinstance(f, ast.Attribute) or f.attr in NONCONSUMING:
+        return None
+    try:
+        base = ast.unparse(f.value)
+    except Exception:
+        return None
+    if base not in RANDOM_BASES:
+        return None
+    if call.args:
+        return call.args[0]
+    for kw in call.keywords:
+        if kw.arg == "key":
+            return kw.value
+    return None
+
+
+class _ScopeKeys(ast.NodeVisitor):
+    """Linear scan of one function/module scope for key consumption.
+
+    Tracks, in source order: sampler calls (consumption of the key
+    expression's unparsed text), assignments (invalidate entries rooted
+    at the reassigned name), and loop nesting (a key rooted outside the
+    loop and consumed inside it is consumed once per iteration)."""
+
+    def __init__(self, ctx: FileContext, scope_node: ast.AST):
+        self.ctx = ctx
+        self.scope = scope_node
+        self.used: dict[str, ast.AST] = {}
+        self.loops: list[tuple[ast.AST, set[str]]] = []  # (node, bound)
+        self.findings: list[Finding] = []
+
+    # -- scope boundaries: nested functions get their own scan
+    def _nested(self, node: ast.AST) -> None:
+        if node is not self.scope:
+            sub = _ScopeKeys(self.ctx, node)
+            body = node.body if isinstance(node.body, list) else [node.body]
+            for st in body:
+                sub.visit(st)
+            self.findings.extend(sub.findings)
+        else:
+            self.generic_visit(node)
+
+    visit_FunctionDef = visit_AsyncFunctionDef = visit_Lambda = _nested
+
+    def _loop(self, node: ast.AST) -> None:
+        bound: set[str] = set()
+        for n in ast.walk(node):
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+                bound.add(n.id)
+        self.loops.append((node, bound))
+        self.generic_visit(node)
+        self.loops.pop()
+
+    visit_For = visit_AsyncFor = visit_While = _loop
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.visit(node.value)
+        for t in node.targets:
+            for n in ast.walk(t):
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+                    self.used = {s: u for s, u in self.used.items()
+                                 if root_name(ast.parse(s, mode="eval").body)
+                                 != n.id}
+
+    def visit_Call(self, node: ast.Call) -> None:
+        self.generic_visit(node)
+        key = _consumed_key(node)
+        if key is None:
+            return
+        try:
+            s = ast.unparse(key)
+        except Exception:
+            return
+        root = root_name(key)
+        if s in self.used:
+            self.findings.append(_finding(
+                self.ctx, node, "JXL002",
+                f"PRNG key `{s}` consumed twice without jax.random.split"))
+            return
+        if self.loops and root is not None:
+            names_in_key = {n.id for n in ast.walk(key)
+                            if isinstance(n, ast.Name)}
+            loop_bound = set().union(*(b for _, b in self.loops))
+            if not (names_in_key & loop_bound):
+                self.findings.append(_finding(
+                    self.ctx, node, "JXL002",
+                    f"PRNG key `{s}` rooted outside the loop is consumed "
+                    "every iteration without split"))
+                return
+        self.used[s] = node
+
+
+def check_jxl002(ctx: FileContext, idx: ModuleIndex) -> list[Finding]:
+    out: list[Finding] = []
+    # (a) same key expression consumed twice / consumed inside a loop
+    scanner = _ScopeKeys(ctx, ctx.tree)
+    for st in ctx.tree.body:
+        scanner.visit(st)
+    out.extend(scanner.findings)
+    # (b) bare PRNGKey(<literal>) in library code
+    if ctx.in_lib:
+        for node in ast.walk(ctx.tree):
+            if (isinstance(node, ast.Call)
+                    and endpoint(node.func) == "PRNGKey"
+                    and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, int)):
+                out.append(_finding(
+                    ctx, node, "JXL002",
+                    f"bare PRNGKey({node.args[0].value}) literal in library "
+                    "code"))
+    return out
+
+
+# ----------------------------------------------------------- JXL003
+
+MUTATORS = {"append", "extend", "insert", "update", "add", "pop",
+            "popitem", "remove", "discard", "clear", "setdefault"}
+
+
+def check_jxl003(ctx: FileContext, idx: ModuleIndex) -> list[Finding]:
+    out: list[Finding] = []
+    seen: set[tuple[int, int]] = set()
+
+    def emit(node: ast.AST, msg: str) -> None:
+        if (node.lineno, node.col_offset) not in seen:
+            seen.add((node.lineno, node.col_offset))
+            out.append(_finding(ctx, node, "JXL003", msg))
+
+    for fn in idx.jit_functions:
+        local = bound_names(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Name) and f.id == "print":
+                    emit(node, "print() under jax.jit runs at trace time "
+                               "only")
+                elif (isinstance(f, ast.Attribute) and f.attr in MUTATORS
+                      and root_name(f.value) is not None
+                      and root_name(f.value) not in local):
+                    emit(node, f".{f.attr}() mutates closed-over/global "
+                               "state under jax.jit")
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, (ast.Subscript, ast.Attribute)):
+                        r = root_name(t.value)
+                        if r is not None and r not in local:
+                            emit(node, "assignment into closed-over/global "
+                                       "state under jax.jit")
+            elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                emit(node, f"{type(node).__name__.lower()} statement under "
+                           "jax.jit")
+    return out
+
+
+# ----------------------------------------------------------- JXL004
+
+UNHASHABLE_ARG = (ast.List, ast.ListComp, ast.Dict, ast.DictComp,
+                  ast.Set, ast.SetComp, ast.GeneratorExp, ast.Lambda)
+
+
+def check_jxl004(ctx: FileContext, idx: ModuleIndex) -> list[Finding]:
+    out: list[Finding] = []
+    # (a) jit'd defs whose python-valued defaults are not static
+    for fn, statics in idx.jit_functions.items():
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        a = fn.args
+        pos = [*a.posonlyargs, *a.args]
+        defaulted = (list(zip(pos[len(pos) - len(a.defaults):], a.defaults))
+                     + [(arg, d) for arg, d in zip(a.kwonlyargs, a.kw_defaults)
+                        if d is not None])
+        for arg, default in defaulted:
+            if arg.arg in statics:
+                continue
+            bad = (isinstance(default, (ast.List, ast.Dict, ast.Set))
+                   or (isinstance(default, ast.Constant)
+                       and isinstance(default.value, (bool, str))))
+            if bad:
+                out.append(_finding(
+                    ctx, default, "JXL004",
+                    f"parameter `{arg.arg}` of jit'd `{fn.name}` has a "
+                    "Python-valued default but is not in static_argnames"))
+    # (b) unhashable/dynamic literals handed to a jit'd call site
+    statics_all = idx.all_static_names()
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and idx.is_jit_call(node)):
+            continue
+        args = list(node.args) + [kw.value for kw in node.keywords
+                                  if kw.arg not in statics_all]
+        for arg in args:
+            if isinstance(arg, UNHASHABLE_ARG):
+                out.append(_finding(
+                    ctx, arg, "JXL004",
+                    f"{type(arg).__name__} literal passed to jit'd "
+                    f"`{endpoint(node.func)}` retraces on every call"))
+    return out
+
+
+JAX_RULES = (check_jxl001, check_jxl002, check_jxl003, check_jxl004)

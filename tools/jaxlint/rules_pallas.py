@@ -1,0 +1,160 @@
+"""Pallas rules: PLL001 (in-kernel hazards) and PLL002 (structure).
+
+PLL001 fires only on files under ``src/**/kernels`` and checks three
+statically-visible hazard classes:
+
+1. a ``pallas_call`` grid built with ``A // B`` in a function that never
+   guards divisibility (no ``% B`` anywhere in the function — neither an
+   assert nor a padding expression);
+2. a ``pl.load``/``pl.store`` index tuple (or a ref subscript) mixing an
+   int literal with ``pl.ds`` — the interpret-mode indexing bug class
+   that PR 1 fixed by hand (leading axes must use ``pl.ds(i, 1)``);
+3. a function that launches ``pallas_call`` without routing its backend
+   choice through ``kernels.default_interpret``.
+
+PLL002 is a structural pass over the whole scanned set: every
+``kernels/*/kernel.py`` must have a sibling ``ref.py`` and a parity test
+under the tests dir that references the package and its ref.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from jaxlint.core import FileContext, Finding
+from jaxlint.dataflow import ModuleIndex, endpoint
+
+
+def _finding(ctx: FileContext, node: ast.AST, code: str,
+             message: str) -> Finding:
+    return Finding(ctx.rel, node.lineno, node.col_offset, code, message)
+
+
+def _is_pl_ds(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call) and endpoint(node.func) == "ds")
+
+
+def _functions(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _floordiv_divisors(expr: ast.AST) -> list[str]:
+    out = []
+    for node in ast.walk(expr):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.FloorDiv):
+            try:
+                out.append(ast.unparse(node.right))
+            except Exception:
+                pass
+    return out
+
+
+def _local_assignment(fn: ast.AST, name: str) -> ast.AST | None:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == name:
+                    return node.value
+    return None
+
+
+def check_pll001(ctx: FileContext, idx: ModuleIndex) -> list[Finding]:
+    if not ctx.in_kernels:
+        return []
+    out: list[Finding] = []
+    for fn in _functions(ctx.tree):
+        mods = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mod):
+                try:
+                    mods.add(ast.unparse(node.right))
+                except Exception:
+                    pass
+        calls_default_interpret = any(
+            isinstance(n, ast.Call)
+            and endpoint(n.func) == "default_interpret"
+            for n in ast.walk(fn))
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if endpoint(node.func) == "pallas_call":
+                # (1) grid divisibility
+                grid = next((kw.value for kw in node.keywords
+                             if kw.arg == "grid"), None)
+                if grid is not None:
+                    if isinstance(grid, ast.Name):
+                        grid = _local_assignment(fn, grid.id) or grid
+                    for div in _floordiv_divisors(grid):
+                        if div not in mods:
+                            out.append(_finding(
+                                ctx, node, "PLL001",
+                                f"grid uses `// {div}` but the function "
+                                f"never guards `% {div}` (assert or pad)"))
+                # (3) interpret routing
+                if not calls_default_interpret:
+                    out.append(_finding(
+                        ctx, node, "PLL001",
+                        "pallas_call launched without routing interpret "
+                        "through kernels.default_interpret"))
+            elif (endpoint(node.func) in ("load", "store")
+                  and len(node.args) >= 2
+                  and isinstance(node.args[1], ast.Tuple)):
+                elts = node.args[1].elts
+                has_int = any(isinstance(e, ast.Constant)
+                              and isinstance(e.value, int) for e in elts)
+                if has_int and any(_is_pl_ds(e) for e in elts):
+                    out.append(_finding(
+                        ctx, node, "PLL001",
+                        "index tuple mixes an int literal with pl.ds — "
+                        "use pl.ds(i, 1) for the leading axis"))
+        # (2b) ref subscripts mixing int literals with pl.ds
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Subscript)
+                    and isinstance(node.slice, ast.Tuple)):
+                elts = node.slice.elts
+                has_int = any(isinstance(e, ast.Constant)
+                              and isinstance(e.value, int) for e in elts)
+                if has_int and any(_is_pl_ds(e) for e in elts):
+                    out.append(_finding(
+                        ctx, node, "PLL001",
+                        "subscript mixes an int literal with pl.ds — "
+                        "use pl.ds(i, 1) for the leading axis"))
+    return out
+
+
+PALLAS_RULES = (check_pll001,)
+
+
+# ----------------------------------------------------------- PLL002
+
+def structural_pass(contexts: list[FileContext],
+                    tests_dir: str = "tests") -> list[Finding]:
+    """Every scanned kernels/*/kernel.py needs a ref.py and a parity
+    test mentioning both the package name and its ref."""
+    out: list[Finding] = []
+    tests_root = pathlib.Path(tests_dir)
+    test_texts: list[str] = []
+    if tests_root.is_dir():
+        for f in sorted(tests_root.rglob("*.py")):
+            try:
+                test_texts.append(f.read_text())
+            except OSError:
+                pass
+    for ctx in contexts:
+        if not (ctx.in_kernels and ctx.parts[-1] == "kernel.py"):
+            continue
+        pkg = ctx.path.parent.name
+        if not (ctx.path.parent / "ref.py").is_file():
+            out.append(Finding(
+                ctx.rel, 1, 0, "PLL002",
+                f"kernel package `{pkg}` has no sibling ref.py reference "
+                "implementation"))
+        if not any(pkg in t and "ref" in t for t in test_texts):
+            out.append(Finding(
+                ctx.rel, 1, 0, "PLL002",
+                f"no test under {tests_dir}/ checks `{pkg}` against its "
+                "ref"))
+    return out
