@@ -22,6 +22,11 @@ experiment is run automatically.
             adapting engine must recover >= half of the routing-accuracy
             drop that leaves the frozen engine degraded (per-window
             timeline written to experiments/tryage/drift_timeline.csv)
+  slo       routing availability + p99 SLO under bursty arrivals with
+            one expert forced unhealthy mid-stream: the health-fallback
+            engine must hold availability >= 0.99 while the health-
+            unaware baseline degrades (per-window timeline written to
+            experiments/tryage/slo_timeline.csv)
 
 Benchmarks whose gates depend on artifact quality (``cascade``,
 ``drift``) fail fast with a regeneration hint when the cached
@@ -662,6 +667,154 @@ def bench_drift(res):
             f"the accuracy drop (need >= 0.5)")
 
 
+def bench_slo(res):
+    """Routing availability + p99 SLO under bursty arrivals with one
+    expert forced unhealthy mid-stream.
+
+    Two engines serve identical 192-request bursty streams on a
+    synthetic clock (deterministic — the clock only advances in the
+    arrival generator, so measured latency is pure queueing delay):
+
+      * *fallback*: ``ExpertHealth`` attached, ``fallback_max_depth=2``.
+        At the one-third mark a persistent failure injection lands on
+        the router's most-picked expert; in-flight lane entries re-route
+        through the fallback chain and the health tracker's failure EWMA
+        plus cooldown keep route-time traffic away from the dead expert
+        for the rest of the run.
+      * *no-fallback*: health-unaware baseline — the same injection
+        makes every post-injection flush of that expert fail terminally
+        (``Result.failed``).
+
+    Gates: the fallback engine must hold routing availability
+    (served / admitted) >= 0.99 while the baseline visibly degrades
+    below it, and the fallback engine's p99 enqueue->flush latency must
+    stay under a generous 5x lane-deadline SLO.  The per-window
+    availability timeline is written to
+    ``experiments/tryage/slo_timeline.csv`` (CI uploads it next to the
+    benchmark CSV).  A generator, so every measured row is emitted
+    before a gate raises.
+    """
+    import jax
+    from repro.core import experiment as ex
+    from repro.core.library import ExpertSpec, ModelLibrary, _enc
+    from repro.core.objective import recency_constraint, size_constraint
+    from repro.core.router import RouterConfig, init_router
+    from repro.models.model import count_params, init_model
+    from repro.serving import ExpertHealth, Request, TryageEngine
+
+    lib = ModelLibrary([
+        ExpertSpec("small", _enc("small", 1, 32, 2, 64, 64), {}, 0.5),
+        ExpertSpec("mid", _enc("mid", 1, 48, 2, 96, 64), {}, 0.5),
+        ExpertSpec("big", _enc("big", 2, 64, 2, 128, 64), {}, 0.9),
+    ])
+    for i, e in enumerate(lib.experts):
+        e.params, _ = init_model(jax.random.PRNGKey(i), e.cfg)
+        e.n_params = count_params(e.params)
+    rc = RouterConfig(n_models=3, vocab_size=64, num_layers=1, d_model=32,
+                      num_heads=2, d_ff=64)
+    rp, _ = init_router(jax.random.PRNGKey(9), rc)
+    cons = [size_constraint(lib), recency_constraint(lib)]
+
+    n, W = 192, 32
+    max_wait = 0.05
+    slo_s = 5 * max_wait
+    rng = np.random.default_rng(0)
+    toks = rng.integers(4, 64, size=(n, 64)).astype(np.int32)
+    flag_mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
+
+    def workload():
+        return [Request(uid=i, tokens=toks[i],
+                        lambdas=flag_mix[i % len(flag_mix)])
+                for i in range(n)]
+
+    # bursty schedule: alternating 24-request bursts (0.5 ms gaps) and
+    # quiet stretches (10 ms gaps), same for both engines
+    sched_t, t = [], 0.0
+    for i in range(n):
+        t += 0.0005 if (i // 24) % 2 == 0 else 0.01
+        sched_t.append(t)
+
+    class Clock:
+        def __init__(self):
+            self.t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    fail_at = n // 3
+
+    def run(with_fallback: bool):
+        clock = Clock()
+        health = (ExpertHealth(len(lib), now_fn=clock)
+                  if with_fallback else None)
+        eng = TryageEngine(lib, rp, rc, cons, max_batch=32,
+                           max_wait_s=max_wait, decision_cache=False,
+                           health=health, fallback_max_depth=2,
+                           now_fn=clock)
+        _, warm = eng._score_batch(workload()[:W])      # compile + prescan
+        E = int(np.bincount(np.asarray(warm), minlength=len(lib)).argmax())
+
+        def arrivals():
+            for i, (r, due) in enumerate(zip(workload(), sched_t)):
+                while clock.t < due:
+                    clock.t = min(clock.t + 0.005, due)
+                    yield None
+                r.arrival = clock.t
+                if i == fail_at:
+                    eng.scheduler.inject_failures(E)
+                yield r
+
+        results = sorted(eng.serve(arrivals()), key=lambda r: r.uid)
+        return eng, results, E
+
+    eng_fb, res_fb, E = run(with_fallback=True)
+    eng_nf, res_nf, E_nf = run(with_fallback=False)
+    assert E == E_nf and len(res_fb) == len(res_nf) == n
+
+    def avail(results):
+        return 1.0 - sum(r.failed for r in results) / len(results)
+
+    def window_avail(results, w):
+        return avail([r for r in results if r.uid // W == w])
+
+    os.makedirs(ex.ART_DIR, exist_ok=True)
+    csv_path = os.path.normpath(
+        os.path.join(ex.ART_DIR, "slo_timeline.csv"))
+    with open(csv_path, "w") as f:
+        f.write("window,fallback_avail,nofallback_avail\n")
+        for w in range(n // W):
+            f.write(f"{w},{window_avail(res_fb, w):.6g},"
+                    f"{window_avail(res_nf, w):.6g}\n")
+
+    a_fb, a_nf = avail(res_fb), avail(res_nf)
+    p99 = float(np.percentile(np.asarray(eng_fb.stats.latencies), 99))
+    st = eng_fb.stats
+    yield ("slo/failed_expert", float(E), lib.experts[E].name)
+    yield ("slo/fallback_availability", a_fb, "must be >= 0.99")
+    yield ("slo/nofallback_availability", a_nf,
+           "must degrade below the fallback engine")
+    yield ("slo/fallback_p99_latency_s", p99,
+           f"synthetic clock; SLO {slo_s:g}s")
+    yield ("slo/fallbacks", float(st.fallbacks), "route-time re-selections")
+    yield ("slo/reroutes", float(st.reroutes), "failed-flush re-routes")
+    yield ("slo/degraded", float(st.degraded), "")
+    yield ("slo/failed_requests", float(st.failed), "")
+    yield ("slo/nofallback_failed", float(eng_nf.stats.failed), "")
+    yield ("slo/timeline_csv", 1.0, csv_path)
+    if a_fb < 0.99:
+        raise RuntimeError(
+            f"slo: fallback engine availability {a_fb:.4f} < 0.99")
+    if a_nf >= a_fb:
+        raise RuntimeError(
+            f"slo: no-fallback baseline did not degrade "
+            f"(fallback={a_fb:.4f}, nofallback={a_nf:.4f}) — the failure "
+            f"injection is not biting")
+    if p99 > slo_s:
+        raise RuntimeError(
+            f"slo: fallback p99 latency {p99:.4f}s exceeds the "
+            f"{slo_s:g}s SLO")
+
+
 # (name, fn, needs_experiment_artifacts)
 BENCHES = [
     ("fig2", bench_fig2, True),
@@ -678,6 +831,7 @@ BENCHES = [
     ("scheduler", bench_scheduler, True),
     ("cascade", bench_cascade, True),
     ("drift", bench_drift, True),
+    ("slo", bench_slo, False),
 ]
 
 

@@ -1,11 +1,21 @@
-"""End-to-end serving driver: batched requests with user flags through the
-TryageEngine (the paper's deployment scenario).
+"""End-to-end serving-front-end demo: concurrent client sessions with
+user flags multiplexed through the bounded admission queue into the
+TryageEngine, with a mid-stream expert failure the health-fallback chain
+routes around, and a Prometheus metrics dump at the end.
 
-Reuses cached experiment artifacts when present; otherwise trains a reduced
-library first.  Shows flag parsing ("[Flag: Smallest model]") feeding the
-constraint weights of the routing objective.
+  PYTHONPATH=src python examples/serve_demo.py          # cached artifacts
+  PYTHONPATH=src python examples/serve_demo.py --demo   # tiny untrained
+                                                        # library, seconds
+
+The default path reuses cached experiment artifacts when present
+(otherwise it trains a reduced library first, ~minutes); --demo builds a
+three-expert untrained library so the full front-end flow — sessions,
+load-shedding, failure injection, fallback, metrics — runs in seconds
+with no artifacts.  Accuracy numbers are only meaningful on the
+artifact path.
 """
 
+import argparse
 import os
 import sys
 
@@ -13,50 +23,124 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import experiment as ex
+from repro.serving import (ExpertHealth, Request, ServingFrontend, Session,
+                           TryageEngine, parse_flags)
+from repro.serving.metrics import render
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--demo", action="store_true",
+                help="tiny untrained library instead of cached artifacts "
+                     "(fast, no training)")
+ap.add_argument("--requests", type=int, default=96)
+ap.add_argument("--sessions", type=int, default=4)
+ap.add_argument("--admission-cap", type=int, default=64)
+ap.add_argument("--metrics-out", type=str, default="")
+args = ap.parse_args()
+
+if args.demo:
+    import jax
+
+    from repro.core.library import ExpertSpec, ModelLibrary, _enc
+    from repro.core.router import RouterConfig, init_router
+    from repro.models.model import count_params, init_model
+
+    lib = ModelLibrary([
+        ExpertSpec("small", _enc("small", 1, 32, 2, 64, 64), {}, 0.5),
+        ExpertSpec("mid", _enc("mid", 1, 48, 2, 96, 64), {}, 0.5),
+        ExpertSpec("big", _enc("big", 2, 64, 2, 128, 64), {}, 0.9),
+    ])
+    for i, e in enumerate(lib.experts):
+        e.params, _ = init_model(jax.random.PRNGKey(i), e.cfg)
+        e.n_params = count_params(e.params)
+    rc = RouterConfig(n_models=3, vocab_size=64, num_layers=1, d_model=32,
+                      num_heads=2, d_ff=64)
+    rp, _ = init_router(jax.random.PRNGKey(9), rc)
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(4, 64, size=(args.requests, 64)).astype(np.int32)
+    targets = mask = [None] * args.requests
+else:
+    from repro.core import experiment as ex
+    from repro.data.batching import mlm_batch
+
+    try:
+        art = ex.load_artifacts()
+    except FileNotFoundError:
+        print("training reduced library first ...")
+        xc = ex.ExperimentConfig(expert_steps=60, n_train_prompts=512,
+                                 n_val_prompts=128, n_test_per_domain=24,
+                                 router_epochs=3)
+        ex.run_experiment(xc, verbose=True)
+        art = ex.load_artifacts()
+    lib, rp, rc, corpus = (art["library"], art["router_params"], art["rc"],
+                           art["corpus"])
+    rng = np.random.default_rng(0)
+    uniform = {d: 1.0 / 8 for d in corpus.tables}
+    toks, _ = corpus.sample_mixture(uniform, args.requests, 128, rng)
+    mb = mlm_batch(toks, rng, 0.15, corpus.vocab_size)
+    tokens, targets, mask = mb["tokens"], mb["targets"], mb["mask"]
+
 from repro.core.objective import recency_constraint, size_constraint
-from repro.data.batching import mlm_batch
-from repro.serving import Request, TryageEngine, parse_flags
 
-try:
-    art = ex.load_artifacts()
-except FileNotFoundError:
-    print("training reduced library first ...")
-    xc = ex.ExperimentConfig(expert_steps=60, n_train_prompts=512,
-                             n_val_prompts=128, n_test_per_domain=24,
-                             router_epochs=3)
-    ex.run_experiment(xc, verbose=True)
-    art = ex.load_artifacts()
-
-lib, rp, rc, corpus = (art["library"], art["router_params"], art["rc"],
-                       art["corpus"])
-# use_kernel=True: head -> softplus -> constraint add -> argmin run fused
-# in the Pallas kernel (embedding stays in XLA, all inside one jit);
-# buckets=True pads expert micro-batches to power-of-two shapes so jit
-# compiles a bounded shape set.
+# the health tracker + fallback_max_depth turn on the fallback chain:
+# when an expert goes unhealthy, the Route stage re-scores the same
+# constrained objective with that expert masked out
+health = ExpertHealth(len(lib))
 engine = TryageEngine(lib, rp, rc,
                       [size_constraint(lib), recency_constraint(lib)],
-                      max_batch=32, use_kernel=True, buckets=True)
+                      max_batch=32, buckets=True, max_wait_s=0.02,
+                      health=health, fallback_max_depth=2)
 
 # flags arrive as natural-language markers, exactly as in the paper
 print("flag parsing:", parse_flags("what is X [Flag: Smallest model]"))
 
-rng = np.random.default_rng(0)
-uniform = {d: 1.0 / 8 for d in corpus.tables}
-toks, _ = corpus.sample_mixture(uniform, 96, 128, rng)
-mb = mlm_batch(toks, rng, 0.15, corpus.vocab_size)
 flags = ["", "[Flag: Small model]", "[Flag: Smallest model]"]
-for i in range(96):
-    engine.submit(Request(uid=i, tokens=mb["tokens"][i],
-                          targets=mb["targets"][i], mask=mb["mask"][i],
-                          lambdas=parse_flags(flags[i % 3])))
+reqs = [Request(uid=i, tokens=tokens[i], targets=targets[i], mask=mask[i],
+                lambdas=parse_flags(flags[i % 3]), priority=i % 2)
+        for i in range(args.requests)]
 
-results = engine.run()
+# concurrent sessions: the frontend polls them round-robin through the
+# bounded admission queue; a mid-stream failure injection on whichever
+# expert serves session 0's first flush exercises the fallback chain
+fail_state = {"armed": False}
+
+
+def session_stream(chunk, inject_after=None):
+    for k, r in enumerate(chunk):
+        if inject_after is not None and k == inject_after \
+                and not fail_state["armed"]:
+            fail_state["armed"] = True
+            busiest = int(np.argmax(engine.scheduler.depths()))
+            print(f"injecting persistent failure on expert "
+                  f"'{lib.experts[busiest].name}'")
+            engine.scheduler.inject_failures(busiest)
+        yield r
+
+
+chunks = [reqs[i::args.sessions] for i in range(args.sessions)]
+sessions = [Session(f"client-{i}",
+                    session_stream(c, inject_after=4 if i == 0 else None))
+            for i, c in enumerate(chunks)]
+frontend = ServingFrontend(engine, sessions, capacity=args.admission_cap)
+
+results = list(frontend.serve())
 accs = [r.accuracy for r in results if r.accuracy is not None]
-losses = [r.loss for r in results if r.loss is not None]
-print(f"served {len(results)} requests, mean masked-token accuracy "
-      f"{np.mean(accs):.3f}, mean masked NLL {np.mean(losses):.3f}")
+print(f"served {len(results)} requests from {args.sessions} sessions "
+      f"(admitted {engine.stats.admitted}, shed {engine.stats.shed})")
+if accs:
+    print(f"mean masked-token accuracy {np.mean(accs):.3f}")
 print("allocation:", dict(engine.stats.per_expert))
-print("buckets:", dict(engine.stats.bucket_hits),
-      "padded rows:", engine.stats.padded_rows)
-print("total FLOPs proxy:", f"{engine.stats.total_flops:.3g}")
+print("fallbacks:", engine.stats.fallbacks,
+      "reroutes:", engine.stats.reroutes,
+      "degraded:", engine.stats.degraded,
+      "failed:", engine.stats.failed)
+print("expert health:", health.snapshot())
+
+names = [e.name for e in lib.experts]
+text = render(engine.stats, health, names)
+if args.metrics_out:
+    with open(args.metrics_out, "w") as f:
+        f.write(text)
+    print(f"metrics written to {args.metrics_out}")
+else:
+    print("--- metrics (first 20 lines) ---")
+    print("\n".join(text.splitlines()[:20]))

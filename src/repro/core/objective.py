@@ -121,6 +121,62 @@ def escalation_order(library: ModelLibrary) -> list:
             np.argsort(library.sizes(), kind="stable")]
 
 
+def fallback_choice(scores, healthy, available, choice: int,
+                    order: Sequence[int], max_depth: int,
+                    ) -> tuple[int, int, bool]:
+    """Health-aware fallback: final ``(expert, depth, degraded)`` for one
+    request whose objective-chosen expert may be down or saturated.
+
+    ``scores`` is the request's constrained routing score vector
+    ``L-hat + sum_j lambda_j C_j`` (n_models,); ``healthy`` and
+    ``available`` are boolean masks over the library (``available`` =
+    healthy *and* not overloaded — the set the serving layer is willing
+    to route new traffic to).  Starting from the objective's ``choice``:
+
+    * If the choice is available (or fallback is disabled via
+      ``max_depth <= 0``) it passes through untouched, depth 0 — the
+      all-healthy fast path is a no-op by construction.
+    * Otherwise the chain walks: exclude the current pick, re-score the
+      same objective over the remaining experts (argmin of ``scores``,
+      ties to the lowest index), and repeat while the fresh pick is
+      still unavailable, up to ``max_depth`` exclusions.  Because each
+      step takes the global argmin of the non-excluded set, the first
+      *available* expert the walk reaches is exactly the argmin of the
+      objective restricted to available experts — fallback never
+      re-ranks the healthy field, it only removes the sick one
+      (property-tested bit-for-bit against that masked re-score in
+      ``tests/test_fallback.py``).
+    * If the walk exhausts its budget (or every expert is unavailable),
+      *graceful degraded mode*: serve the smallest healthy expert
+      (first healthy rung of the size-sorted ``order``), overloaded or
+      not — keeping the system answering beats honouring the objective.
+      With no healthy expert at all the smallest expert overall is
+      returned; the caller decides whether to serve or fail it.
+
+    ``depth`` counts expert re-selections (0 = original pick served)
+    and is monotone along the chain; a degraded pick that lands on a
+    different expert counts as one more step.
+    """
+    if max_depth <= 0 or available[choice]:
+        return int(choice), 0, False
+    s = np.asarray(scores, np.float64)
+    cur = int(choice)
+    excluded = {cur}
+    depth = 0
+    while depth < max_depth and len(excluded) < len(s):
+        cand = [i for i in range(len(s)) if i not in excluded]
+        cur = min(cand, key=lambda i: (s[i], i))
+        depth += 1
+        if available[cur]:
+            return cur, depth, False
+        excluded.add(cur)
+    # degraded: smallest healthy expert, else smallest expert overall
+    final = next((int(i) for i in order if healthy[i]), int(order[0]))
+    if final != cur:
+        depth += 1
+    return final, depth, True
+
+
 def cascade_choice(choice: int, confidence, min_confidence: float,
                    order: Sequence[int], max_depth: int,
                    scores=None) -> tuple[int, int]:

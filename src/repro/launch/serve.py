@@ -6,7 +6,10 @@ drive the streaming API with a Poisson arrival simulator.
       [--max-wait-s 0.05] [--priority-mix 0.9,0.08,0.02] \
       [--cascade 0.6] [--cascade-depth 2] \
       [--adapt-every 16 --adapt-lr 0.05 --replay-cap 1024] \
-      [--drift-after 128 --drift-domains github,dm_math]
+      [--drift-after 128 --drift-domains github,dm_math] \
+      [--sessions 4 --admission-cap 256] [--fallback-depth 2] \
+      [--fail-expert small --fail-after 64] \
+      [--metrics-port 9109] [--metrics-out metrics.prom]
 
 By default requests flow through ``TryageEngine.serve`` — the
 continuous-batching scheduler that coalesces same-expert requests
@@ -39,6 +42,19 @@ domain shift: the first R requests are drawn from the uniform domain
 mix, everything after from a mix concentrated on --drift-domains —
 watch the adaptation telemetry track the shift (or freeze the router
 with --adapt-every 0 and watch it go stale).
+
+Front end + health + metrics: --sessions N multiplexes the request
+stream over N concurrent client sessions through the bounded admission
+queue (--admission-cap; overflow load-sheds the lowest-priority request
+in play).  --fallback-depth D attaches an ExpertHealth tracker and lets
+the Route stage walk up to D fallback re-selections around unhealthy or
+saturated experts; --fail-expert NAME arms a persistent failure
+injection on that expert's lanes once --fail-after requests have been
+admitted — with fallback on, traffic re-routes around it; with
+--fallback-depth 0 its requests fail terminally (Result.failed).
+--metrics-port P serves Prometheus text metrics at
+http://127.0.0.1:P/metrics for the duration of the run; --metrics-out
+FILE writes a final scrape to FILE.  See docs/OPERATIONS.md.
 """
 
 from __future__ import annotations
@@ -122,6 +138,31 @@ def main():
     ap.add_argument("--drift-domains", type=str, default="github,dm_math",
                     help="comma list of domains the post-shift mix "
                          "concentrates on")
+    ap.add_argument("--sessions", type=int, default=0, metavar="N",
+                    help="multiplex the stream over N concurrent client "
+                         "sessions through the front end's bounded "
+                         "admission queue (0 = direct iterator)")
+    ap.add_argument("--admission-cap", type=int, default=256,
+                    help="front-end admission-queue bound; overflow "
+                         "load-sheds the lowest-priority request")
+    ap.add_argument("--fallback-depth", type=int, default=0, metavar="D",
+                    help="attach a health tracker and walk up to D "
+                         "fallback re-selections around unhealthy or "
+                         "saturated experts (0 = health-unaware, the "
+                         "default)")
+    ap.add_argument("--fail-expert", type=str, default="",
+                    help="arm a persistent failure injection on this "
+                         "expert's lanes (by name) once --fail-after "
+                         "requests have been admitted")
+    ap.add_argument("--fail-after", type=int, default=0,
+                    help="admitted-request count that triggers "
+                         "--fail-expert")
+    ap.add_argument("--metrics-port", type=int, default=0, metavar="P",
+                    help="serve Prometheus text metrics on "
+                         "http://127.0.0.1:P/metrics during the run "
+                         "(0 = off)")
+    ap.add_argument("--metrics-out", type=str, default="",
+                    help="write a final metrics scrape to this file")
     ap.add_argument("--sanitize", action="store_true",
                     help="enable the checkify sanitizer (NaN/inf + OOB "
                          "checks on the routing path; same switch as "
@@ -137,7 +178,9 @@ def main():
     from repro.core import experiment as ex
     from repro.core.objective import recency_constraint, size_constraint
     from repro.data.batching import mlm_batch
-    from repro.serving import Request, TryageEngine
+    from repro.serving import (ExpertHealth, Request, ServingFrontend,
+                               Session, TryageEngine)
+    from repro.serving.metrics import render, start_metrics_server
 
     try:
         art = ex.load_artifacts()
@@ -156,6 +199,8 @@ def main():
         print("calibrating uncertainty head on held-out Q-table", flush=True)
         rp = calibrate_uncertainty(rp, rc, art["test_tokens"],
                                    art["q_test"]["loss"])
+    health = (ExpertHealth(len(lib))
+              if args.fallback_depth > 0 or args.fail_expert else None)
     eng = TryageEngine(lib, rp, rc,
                        [size_constraint(lib), recency_constraint(lib)],
                        max_batch=args.max_batch,
@@ -167,7 +212,9 @@ def main():
                        cascade_max_depth=args.cascade_depth,
                        adapt_every=args.adapt_every,
                        adapt_lr=args.adapt_lr,
-                       replay_cap=args.replay_cap)
+                       replay_cap=args.replay_cap,
+                       health=health,
+                       fallback_max_depth=args.fallback_depth)
 
     rng = np.random.default_rng(0)
     uniform = {d: 1.0 / 8 for d in corpus.tables}
@@ -202,15 +249,62 @@ def main():
                     min_confidence=args.cascade)
             for i in range(args.requests)]
 
+    names = [e.name for e in lib]
+    fail_idx = None
+    if args.fail_expert:
+        if args.fail_expert not in names:
+            raise SystemExit(f"--fail-expert must be one of {names}")
+        if args.fifo:
+            ap.error("--fail-expert needs the scheduler (drop --fifo)")
+        fail_idx = names.index(args.fail_expert)
+    if args.sessions > 0 and args.fifo:
+        ap.error("--sessions needs the streaming engine (drop --fifo)")
+
+    # arm the failure injection mid-stream: once --fail-after requests
+    # have been admitted, every flush of the target expert's lanes fails
+    # until the end of the run
+    trigger = {"n": 0, "armed": False}
+
+    def with_failure_trigger(stream):
+        for item in stream:
+            yield item
+            if item is not None:
+                trigger["n"] += 1
+                if (fail_idx is not None and not trigger["armed"]
+                        and trigger["n"] >= args.fail_after):
+                    trigger["armed"] = True
+                    eng.scheduler.inject_failures(fail_idx)
+
+    srv = None
+    if args.metrics_port:
+        srv = start_metrics_server(
+            args.metrics_port,
+            lambda: render(eng.stats, eng.health, names))
+        print(f"metrics: http://127.0.0.1:{srv.port}/metrics", flush=True)
+
     t0 = time.monotonic()
     if args.fifo:
         for r in reqs:
             eng.submit(r)
         results = eng.run()
+    elif args.sessions > 0:
+        chunks = [reqs[i::args.sessions] for i in range(args.sessions)]
+        sess = [Session(f"s{i}", with_failure_trigger(poisson_arrivals(
+                    c, args.arrival_rate / args.sessions, rng)))
+                for i, c in enumerate(chunks)]
+        fe = ServingFrontend(eng, sess, capacity=args.admission_cap)
+        results = list(fe.serve())
     else:
-        arrivals = poisson_arrivals(reqs, args.arrival_rate, rng)
+        arrivals = with_failure_trigger(
+            poisson_arrivals(reqs, args.arrival_rate, rng))
         results = list(eng.serve(arrivals))
     dt = time.monotonic() - t0
+    if srv is not None:
+        srv.stop()
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(render(eng.stats, eng.health, names))
+        print(f"metrics written to {args.metrics_out}", flush=True)
     accs = [r.accuracy for r in results if r.accuracy is not None]
     losses = [r.loss for r in results if r.loss is not None]
     print(json.dumps({
@@ -222,6 +316,9 @@ def main():
         "sanitize": args.sanitize,
         "drift_after": args.drift_after,
         "arrival_rate": args.arrival_rate,
+        "sessions": args.sessions,
+        "fallback_depth": args.fallback_depth,
+        "fail_expert": args.fail_expert or None,
         "wall_s": round(dt, 2),
         "req_per_s": round(len(results) / dt, 1),
         "mean_mlm_accuracy": round(float(np.mean(accs)), 4),

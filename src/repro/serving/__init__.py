@@ -1,9 +1,13 @@
 from repro.serving.cache import DecisionCache
 from repro.serving.engine import TryageEngine, EngineStats, bucket_size
 from repro.serving.feedback import ReplayBuffer
+from repro.serving.frontend import AdmissionQueue, ServingFrontend, Session
+from repro.serving.health import ExpertHealth, ExpertState
+from repro.serving.metrics import (MetricSpec, MetricsServer, metric_names,
+                                   render, start_metrics_server)
 from repro.serving.pipeline import (CascadeStage, ExecuteStage,
-                                    FeedbackStage, FlushContext,
-                                    RouteContext, RouteStage,
+                                    FallbackStage, FeedbackStage,
+                                    FlushContext, RouteContext, RouteStage,
                                     ServingPipeline)
 from repro.serving.requests import (Request, Result, lambda_matrix,
                                     parse_flags)
@@ -14,4 +18,8 @@ __all__ = ["TryageEngine", "EngineStats", "Request", "Result",
            "ExpertScheduler", "Lane", "LaneEntry",
            "ReplayBuffer", "ServingPipeline", "RouteContext",
            "FlushContext", "RouteStage", "CascadeStage", "ExecuteStage",
-           "FeedbackStage"]
+           "FeedbackStage", "FallbackStage",
+           "ExpertHealth", "ExpertState",
+           "ServingFrontend", "Session", "AdmissionQueue",
+           "MetricSpec", "MetricsServer", "metric_names", "render",
+           "start_metrics_server"]

@@ -94,7 +94,7 @@ import numpy as np
 from repro.core.library import ModelLibrary
 from repro.core.objective import (Constraint, cascade_choice,
                                   confidence_scores, constraint_matrix,
-                                  escalation_order)
+                                  escalation_order, fallback_choice)
 from repro.core.router import (RouterConfig, VersionedParams,
                                predict_losses, predict_uncertainty,
                                router_embed)
@@ -105,6 +105,7 @@ from repro.kernels.router_score import ops as rs_ops
 from repro.models.model import forward
 from repro.serving.cache import DecisionCache
 from repro.serving.feedback import ReplayBuffer
+from repro.serving.health import ExpertHealth
 from repro.serving.pipeline import ServingPipeline
 from repro.serving.requests import Request, Result, lambda_matrix
 from repro.serving.scheduler import ExpertScheduler, LaneEntry
@@ -165,6 +166,27 @@ class EngineStats:
     adapt_time_s: float = 0.0
     adapt_pre_err: float = 0.0
     adapt_post_err: float = 0.0
+    # serving-front-end telemetry: concurrent sessions multiplexed, total
+    # requests admitted through the bounded queue, load-shed requests
+    # (total and per Request.priority), and the queue's peak occupancy.
+    sessions: int = 0
+    admitted: int = 0
+    shed: int = 0
+    shed_by_priority: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    admission_queue_peak: int = 0
+    # health-fallback telemetry: route-time fallback re-selections (with
+    # a depth histogram and the graceful-degraded subset), failed-flush
+    # re-routes, requests failed outright (no fallback available), and
+    # failed flushes per expert name.
+    fallbacks: int = 0
+    fallback_depth_hist: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    degraded: int = 0
+    reroutes: int = 0
+    failed: int = 0
+    expert_failures: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
 
     @property
     def cache_hit_rate(self) -> float:
@@ -221,7 +243,24 @@ class EngineStats:
                                "cap": self.replay_cap},
                     "pre_err": round(self.adapt_pre_err, 6),
                     "post_err": round(self.adapt_post_err, 6),
-                    "time_s": round(self.adapt_time_s, 3)}}
+                    "time_s": round(self.adapt_time_s, 3)},
+                "frontend": {
+                    "sessions": self.sessions,
+                    "admitted": self.admitted,
+                    "shed": self.shed,
+                    "shed_by_priority": {int(k): v for k, v in
+                                         sorted(self.shed_by_priority
+                                                .items())},
+                    "queue_peak": self.admission_queue_peak},
+                "fallback": {
+                    "fallbacks": self.fallbacks,
+                    "depth_hist": {int(k): v for k, v in
+                                   sorted(self.fallback_depth_hist
+                                          .items())},
+                    "degraded": self.degraded,
+                    "reroutes": self.reroutes,
+                    "failed": self.failed,
+                    "expert_failures": dict(self.expert_failures)}}
 
 
 class TryageEngine:
@@ -266,8 +305,13 @@ class TryageEngine:
                  adapt_ema: float = 0.0, adapt_batch: int = 32,
                  adapt_trainable: str = "head", replay_cap: int = 4096,
                  adapt_seed: int = 0,
+                 health: ExpertHealth | None = None,
+                 fallback_max_depth: int = 2,
                  now_fn: Callable[[], float] = time.monotonic):
         assert len(library) == rc.n_models
+        if health is not None:
+            assert health.n_experts == len(library), \
+                "health tracker sized for a different library"
         self.library = library
         # the served router is a versioned snapshot: online adaptation
         # computes new weights off to the side and publishes them with
@@ -285,6 +329,14 @@ class TryageEngine:
                       else None)
         self.cascade_max_depth = cascade_max_depth
         self._esc_order = escalation_order(library)
+        # per-expert health/overload tracker (None = health-unaware
+        # engine, the fallback stage is a strict no-op) and the bound on
+        # route-time fallback re-selections per request
+        self.health = health
+        self.fallback_max_depth = fallback_max_depth
+        # live ExpertScheduler while serve() runs (failure-injection
+        # handle for tests/benchmarks); None outside serve()
+        self.scheduler: ExpertScheduler | None = None
         self._now = now_fn
         self.queue: list[Request] = []
         self.stats = EngineStats()
@@ -512,24 +564,29 @@ class TryageEngine:
         return final, depth, conf
 
     def _route_admitted(self, reqs: list[Request]) -> tuple[
-            np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-        """Run the admission half of the pipeline (Route -> Cascade):
-        cached requests skip scoring, misses are scored as one (smaller)
-        batch, cascaded, and memoised post-cascade.
+            np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray,
+            np.ndarray]:
+        """Run the admission half of the pipeline (Route -> Cascade ->
+        Fallback): cached requests skip scoring, misses are scored as
+        one (smaller) batch, cascaded, and memoised post-cascade; the
+        health consult then re-routes any row whose chosen expert is
+        down or saturated (no-op without a health tracker).
 
         Returns ``(pred_losses (B, M), choice (B,), cached (B,) bool,
-        depth (B,) int, confidence (B,) float)`` — ``choice`` is the
-        final post-escalation expert.
+        depth (B,) int, confidence (B,) float, fallback_depth (B,)
+        int)`` — ``choice`` is the final post-escalation, post-fallback
+        expert.
         """
         ctx = self.pipeline.admit(reqs)
-        return ctx.pred, ctx.choice, ctx.cached, ctx.depth, ctx.confidence
+        return (ctx.pred, ctx.choice, ctx.cached, ctx.depth,
+                ctx.confidence, ctx.fallback_depth)
 
     def _route_batch(self, reqs: list[Request]) -> tuple[np.ndarray,
                                                          np.ndarray]:
         """Route one batch of requests (cache-aware); see
         ``_route_admitted`` for the variant that also reports hits,
         cascade depth and confidence."""
-        pred, choice, _, _, _ = self._route_admitted(reqs)
+        pred, choice, _, _, _, _ = self._route_admitted(reqs)
         return pred, choice
 
     # ------------------------------------------------ online adaptation
@@ -615,6 +672,82 @@ class TryageEngine:
         one per-expert micro-batch and return its Results."""
         return self.pipeline.flush(expert_idx, entries, reason)
 
+    def _flush_or_fail(self, sched: ExpertScheduler, expert_idx: int,
+                       entries: list[LaneEntry], reason: str,
+                       ) -> list[Result]:
+        """Execute one scheduled flush, honouring the scheduler's
+        armed failure injections and feeding the health tracker.
+
+        A failed flush never loses a request: with a health tracker and
+        fallback budget left, its entries are re-routed through the
+        fallback chain into other experts' lanes (``Result`` arrives
+        later, with a higher ``fallback_depth``); otherwise each entry
+        yields a terminal failed ``Result`` (``failed=True``,
+        ``flush_reason="failed"``) so the client sees the rejection
+        instead of a hang."""
+        if sched.take_failure(expert_idx):
+            return self._failed_flush(sched, expert_idx, entries)
+        t0 = self._now()
+        out = self._execute(expert_idx, entries, reason)
+        if self.health is not None:
+            self.health.observe_flush(expert_idx, self._now() - t0,
+                                      ok=True)
+        return out
+
+    def _failed_flush(self, sched: ExpertScheduler, expert_idx: int,
+                      entries: list[LaneEntry]) -> list[Result]:
+        """One lane flush failed: record it, then re-route or fail each
+        entry.  Re-routing re-scores the request's own constrained
+        objective with the failed expert masked out (same rule as the
+        route-time fallback stage) and re-enqueues it; its
+        ``fallback_depth`` stays monotone across the bounces, and a
+        request whose depth would exceed ``fallback_max_depth`` plus one
+        full sweep of the library fails terminally instead of bouncing
+        forever."""
+        e = self.library[expert_idx]
+        self.stats.expert_failures[e.name] += 1
+        if self.health is not None:
+            self.health.record_failure(expert_idx)
+        budget = self.fallback_max_depth + len(self.library)
+        failed: list[Result] = []
+        lam = lambda_matrix([en.req for en in entries], self._cnames)
+        scores = None
+        if self.health is not None and self.fallback_max_depth > 0:
+            scores = np.stack([en.pred for en in entries]) + lam @ self._cmat
+            healthy = self.health.healthy_mask().copy()
+            avail = self.health.available_mask().copy()
+            # the expert that just failed is off the table either way
+            healthy[expert_idx] = avail[expert_idx] = False
+        now = self._now()
+        for j, en in enumerate(entries):
+            target = None
+            if scores is not None and en.fallback_depth < budget:
+                final, fdepth, degraded = fallback_choice(
+                    scores[j], healthy, avail, expert_idx,
+                    self._esc_order, self.fallback_max_depth)
+                if final != expert_idx:
+                    target = (final, fdepth, degraded)
+            if target is None:
+                r = en.req
+                self.stats.failed += 1
+                failed.append(Result(
+                    uid=r.uid, expert=e.name, pred_losses=en.pred,
+                    predictions=np.zeros(0, np.int64), loss=None,
+                    accuracy=None, flops_proxy=0.0,
+                    latency_s=(max(now - r.arrival, 0.0)
+                               if r.arrival is not None else 0.0),
+                    cached=en.cached, flush_reason="failed",
+                    cascade_depth=en.depth, confidence=en.confidence,
+                    fallback_depth=en.fallback_depth, failed=True))
+                continue
+            final, fdepth, degraded = target
+            self.stats.reroutes += 1
+            if degraded:
+                self.stats.degraded += 1
+            sched.push(final, en.req, en.pred, en.cached, en.depth,
+                       en.confidence, en.fallback_depth + fdepth)
+        return failed
+
     # -------------------------------------------------------- disciplines
 
     def run(self) -> list[Result]:
@@ -628,13 +761,15 @@ class TryageEngine:
         while self.queue:
             batch, self.queue = (self.queue[:self.max_batch],
                                  self.queue[self.max_batch:])
-            pred, choice, cached, depth, conf = self._route_admitted(batch)
+            (pred, choice, cached, depth, conf,
+             fdepth) = self._route_admitted(batch)
             by_expert: dict[int, list[int]] = defaultdict(list)
             for i, c in enumerate(choice):
                 by_expert[int(c)].append(i)
             for mi, idxs in sorted(by_expert.items()):
                 entries = [LaneEntry(batch[i], pred[i], i, bool(cached[i]),
-                                     int(depth[i]), float(conf[i]))
+                                     int(depth[i]), float(conf[i]),
+                                     int(fdepth[i]))
                            for i in idxs]
                 results.extend(self._execute(mi, entries, "fifo"))
         return results
@@ -661,14 +796,22 @@ class TryageEngine:
         """
         sched = ExpertScheduler(len(self.library), self.lane_target,
                                 self.max_wait_s)
+        self.scheduler = sched
         admitted: list[Request] = []
 
         def _admit():
-            pred, choice, cached, depth, conf = self._route_admitted(admitted)
+            (pred, choice, cached, depth, conf,
+             fdepth) = self._route_admitted(admitted)
             for i, r in enumerate(admitted):
                 sched.push(int(choice[i]), r, pred[i], bool(cached[i]),
-                           int(depth[i]), float(conf[i]))
+                           int(depth[i]), float(conf[i]), int(fdepth[i]))
             admitted.clear()
+            if self.health is not None:
+                # saturation signal: every expert's pending depth folds
+                # into its health EWMA at each admission (zeros included
+                # so idle lanes decay)
+                for mi, d in enumerate(sched.depths()):
+                    self.health.observe_lane_depth(mi, d)
 
         if self.queue:
             queued, self.queue = self.queue, []
@@ -688,12 +831,15 @@ class TryageEngine:
                                  >= 0.5 * self.max_wait_s)):
                 _admit()
             for mi, entries, reason in sched.pop_ready(self._now()):
-                yield from self._execute(mi, entries, reason)
+                yield from self._flush_or_fail(sched, mi, entries, reason)
         # input exhausted: shutdown drain leaves no request behind
         if admitted:
             _admit()
-        for mi, entries, reason in sched.drain():
-            yield from self._execute(mi, entries, reason)
+        # a drain flush may re-route entries into other lanes (failure
+        # injection during shutdown), so drain until quiescent
+        while sched.pending:
+            for mi, entries, reason in sched.drain():
+                yield from self._flush_or_fail(sched, mi, entries, reason)
         for mi, peak in sched.peaks().items():
             name = self.library[mi].name
             self.stats.lane_peaks[name] = max(

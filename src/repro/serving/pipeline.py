@@ -67,6 +67,7 @@ class RouteContext:
     cached: np.ndarray | None = None        # (B,) bool cache hits
     depth: np.ndarray | None = None         # (B,) i64 cascade depth
     confidence: np.ndarray | None = None    # (B,) f64 final confidence
+    fallback_depth: np.ndarray | None = None  # (B,) i64 health fallbacks
     keys: list | None = None
     miss_idx: list[int] = dataclasses.field(default_factory=list)
 
@@ -100,6 +101,7 @@ class RouteStage:
         ctx.cached = np.zeros(B, bool)
         ctx.depth = np.zeros(B, np.int64)
         ctx.confidence = np.ones(B, np.float64)
+        ctx.fallback_depth = np.zeros(B, np.int64)
         if eng.cache is None:
             pred, choice = eng._score_batch(ctx.reqs)
             ctx.pred[:] = pred
@@ -160,6 +162,51 @@ class CascadeStage:
         return ctx
 
 
+class FallbackStage:
+    """Health consult: walk the fallback chain for requests whose chosen
+    expert is unhealthy or saturated (``core.objective.fallback_choice``
+    over ``engine.health``'s availability mask).
+
+    Runs *after* the cache/cascade half on every row — cache hits
+    included, because health is time-varying state that must never be
+    memoised: the cache stores the pre-fallback verdict and this stage
+    re-applies the current health picture to it.  With no health tracker
+    attached (``engine.health is None``, the default) or with every
+    expert available, the stage is a strict no-op — the parity contract
+    with the health-unaware engine (tests/test_fallback.py) holds by
+    construction."""
+
+    def __init__(self, engine: "TryageEngine"):
+        self.eng = engine
+
+    def __call__(self, ctx: RouteContext) -> RouteContext:
+        eng = self.eng
+        if eng.health is None or eng.fallback_max_depth <= 0:
+            return ctx
+        avail = eng.health.available_mask()
+        if avail.all():
+            return ctx
+        from repro.core.objective import fallback_choice
+        from repro.serving.requests import lambda_matrix
+        healthy = eng.health.healthy_mask()
+        # the same constrained objective the Route stage minimised:
+        # L-hat + sum_j lambda_j C_j, per request
+        scores = ctx.pred + lambda_matrix(ctx.reqs, eng._cnames) @ eng._cmat
+        for i in range(len(ctx.reqs)):
+            final, fdepth, degraded = fallback_choice(
+                scores[i], healthy, avail, int(ctx.choice[i]),
+                eng._esc_order, eng.fallback_max_depth)
+            if fdepth == 0:
+                continue
+            ctx.choice[i] = final
+            ctx.fallback_depth[i] = fdepth
+            eng.stats.fallbacks += 1
+            eng.stats.fallback_depth_hist[fdepth] += 1
+            if degraded:
+                eng.stats.degraded += 1
+        return ctx
+
+
 class ExecuteStage:
     """Launch one padded per-expert micro-batch and materialise Results
     with true enqueue->flush latency; all execution telemetry
@@ -192,7 +239,8 @@ class ExecuteStage:
                 predictions=preds[j], loss=loss, accuracy=acc,
                 flops_proxy=flops, latency_s=latency, cached=en.cached,
                 flush_reason=ctx.reason, cascade_depth=en.depth,
-                confidence=en.confidence))
+                confidence=en.confidence,
+                fallback_depth=en.fallback_depth))
             eng.stats.served += 1
             eng.stats.per_expert[e.name] += 1
             eng.stats.total_flops += flops
@@ -237,11 +285,14 @@ class FeedbackStage:
 
 
 class ServingPipeline:
-    """The four stages composed over one engine.
+    """The five stages composed over one engine.
 
-    ``admit``  runs Route -> Cascade on an admission batch and returns
-               the filled RouteContext (the engine pushes the rows into
-               scheduler lanes, or executes them directly under FIFO).
+    ``admit``  runs Route -> Cascade -> Fallback on an admission batch
+               and returns the filled RouteContext (the engine pushes
+               the rows into scheduler lanes, or executes them directly
+               under FIFO).  Fallback is a strict no-op without a
+               health tracker, so the health-unaware pipeline is still
+               the PR-4 Route -> Cascade flow bit-for-bit.
     ``flush``  runs Execute -> Feedback on one per-expert micro-batch
                and returns its Results.
     """
@@ -249,11 +300,12 @@ class ServingPipeline:
     def __init__(self, engine: "TryageEngine"):
         self.route = RouteStage(engine)
         self.cascade = CascadeStage(engine)
+        self.fallback = FallbackStage(engine)
         self.execute = ExecuteStage(engine)
         self.feedback = FeedbackStage(engine)
 
     def admit(self, reqs: list[Request]) -> RouteContext:
-        return self.cascade(self.route(RouteContext(reqs)))
+        return self.fallback(self.cascade(self.route(RouteContext(reqs))))
 
     def flush(self, expert_idx: int, entries: list[LaneEntry],
               reason: str) -> list[Result]:

@@ -80,5 +80,13 @@ class Result:
     latency_s: float                   # true enqueue -> flush latency
     cached: bool = False               # routing decision came from the cache
     flush_reason: str = ""             # target | deadline | drain | fifo
+    #                                    (| failed: expert flush failed and
+    #                                    fallback could not re-route)
     cascade_depth: int = 0             # escalation steps taken (0 = first pick)
     confidence: float = 1.0            # router confidence in the final expert
+    fallback_depth: int = 0            # health-fallback re-selections taken
+    #                                    (0 = objective's pick served; monotone
+    #                                    over the request's lifetime, route-time
+    #                                    fallback + failed-flush re-routes)
+    failed: bool = False               # expert execution failed and the request
+    #                                    was not served (no fallback available)

@@ -58,6 +58,7 @@ class LaneEntry:
     cached: bool = False      # routing decision came from the cache
     depth: int = 0            # cascade escalation steps (0 = first pick)
     confidence: float = 1.0   # router confidence in the final expert
+    fallback_depth: int = 0   # health-fallback re-selections so far
 
     @property
     def sort_key(self) -> tuple:
@@ -116,6 +117,9 @@ class ExpertScheduler:
         # escalation lanes: cascade-recovered traffic, one per expert
         self.esc_lanes = {i: Lane(i) for i in range(n_experts)}
         self._seq = 0
+        # per-lane failure injection (tests/benchmarks): outstanding
+        # failure count per expert; -1 = fail every flush until cleared
+        self._inject_fail: dict[int, int] = {}
 
     # ------------------------------------------------------- routing in
 
@@ -127,12 +131,14 @@ class ExpertScheduler:
         cached: bool = False,
         depth: int = 0,
         confidence: float = 1.0,
+        fallback_depth: int = 0,
     ) -> None:
         """Enqueue a routed request; escalated requests (``depth > 0``)
         are re-enqueued into the target expert's escalation lane."""
         lanes = self.esc_lanes if depth > 0 else self.lanes
         lanes[expert_idx].push(
-            LaneEntry(req, pred, self._seq, cached, depth, confidence)
+            LaneEntry(req, pred, self._seq, cached, depth, confidence,
+                      fallback_depth)
         )
         self._seq += 1
 
@@ -166,6 +172,36 @@ class ExpertScheduler:
         yield from self.lanes.values()
         yield from self.esc_lanes.values()
 
+    # ------------------------------------------------- failure injection
+
+    def inject_failures(self, expert_idx: int, count: int = -1) -> None:
+        """Arm the per-lane failure hook: the next ``count`` flushes of
+        this expert's lanes *fail* (``count = -1``: every flush until
+        ``clear_failures``).  This is the test/benchmark seam for
+        degraded-expert scenarios — the engine consumes one armed
+        failure per flush via ``take_failure`` and reacts exactly as it
+        would to a real execution error (record it in ``ExpertHealth``,
+        re-route the entries through the fallback chain, or fail the
+        requests when fallback is off)."""
+        self._inject_fail[expert_idx] = count
+
+    def clear_failures(self, expert_idx: int) -> None:
+        self._inject_fail.pop(expert_idx, None)
+
+    def take_failure(self, expert_idx: int) -> bool:
+        """Consume one armed failure for this expert, if any (called by
+        the engine once per flush, before execution)."""
+        left = self._inject_fail.get(expert_idx, 0)
+        if left == 0:
+            return False
+        if left > 0:
+            left -= 1
+            if left == 0:
+                self._inject_fail.pop(expert_idx, None)
+            else:
+                self._inject_fail[expert_idx] = left
+        return True
+
     # -------------------------------------------------------- telemetry
 
     @property
@@ -179,6 +215,22 @@ class ExpertScheduler:
             if len(lane):
                 out[lane.expert_idx] = out.get(lane.expert_idx, 0) + len(lane)
         return out
+
+    def depths(self) -> list[int]:
+        """Current pending depth for *every* expert (both tiers pooled,
+        zeros included) — the saturation signal ``ExpertHealth`` folds
+        into its per-expert depth EWMA at each admission.  Dense on
+        purpose: idle lanes must report 0 so their EWMA decays."""
+        out = [0] * len(self.lanes)
+        for lane in self._all_lanes():
+            out[lane.expert_idx] += len(lane)
+        return out
+
+    def saturation(self, expert_idx: int) -> float:
+        """Pending depth of one expert's lanes as a multiple of the
+        flush target (1.0 = exactly one full bucket waiting)."""
+        depth = len(self.lanes[expert_idx]) + len(self.esc_lanes[expert_idx])
+        return depth / float(self.target)
 
     def peaks(self) -> dict[int, int]:
         """Peak pending depth per regular expert lane."""

@@ -1,0 +1,329 @@
+"""Health-driven fallback: the chain-walk selection rule and the
+engine-level behaviour contracts.
+
+Three layers:
+
+* ``fallback_choice`` property (hypothesis): whenever the chain walk
+  terminates at an available expert, its pick is *bit-for-bit* the
+  lexicographic argmin of the same scores over the available experts —
+  i.e. fallback is exactly "re-score with the unavailable experts
+  masked out", never a different objective.
+* Parity: an engine with a health tracker attached but every expert
+  healthy produces identical Results and EngineStats to the
+  health-unaware engine (``health=None``) — the PR-4 pipeline — under
+  both disciplines; all traffic carries ``fallback_depth=0``.
+* Failure paths: route-time fallback around a forced-down expert
+  matches a host re-score reference (cache hits included), failed
+  flushes re-route stranded entries with monotone ``fallback_depth``,
+  and the no-fallback baseline fails them terminally.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.objective import (fallback_choice, recency_constraint,
+                                  size_constraint)
+from repro.core.router import RouterConfig, init_router
+from repro.data.batching import mlm_batch
+from repro.serving import ExpertHealth, Request, TryageEngine
+from repro.serving.requests import lambda_matrix
+
+from hyputil import given, settings, st
+
+RC = RouterConfig(n_models=3, vocab_size=64, num_layers=1, d_model=32,
+                  num_heads=2, d_ff=64)
+
+
+class Clock:
+    def __init__(self, t=1.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def router_params():
+    rp, _ = init_router(jax.random.PRNGKey(9), RC)
+    return rp
+
+
+def _requests(n, seed=0, n_unique=None):
+    n_unique = n if n_unique is None else n_unique
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(4, 64, size=(n_unique, 32)).astype(np.int32)
+    mb = mlm_batch(toks, rng, 0.2, 64)
+    mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
+    return [Request(uid=i, tokens=mb["tokens"][i % n_unique],
+                    targets=mb["targets"][i % n_unique],
+                    mask=mb["mask"][i % n_unique],
+                    lambdas=mix[i % len(mix)])
+            for i in range(n)]
+
+
+def _engine(library, params, clock, **kw):
+    cons = [size_constraint(library), recency_constraint(library)]
+    kw.setdefault("max_batch", 32)
+    return TryageEngine(library, params, RC, cons, now_fn=clock, **kw)
+
+
+def _result_key(r):
+    d = dataclasses.asdict(r)
+    d["pred_losses"] = d["pred_losses"].tobytes()
+    d["predictions"] = d["predictions"].tobytes()
+    return d
+
+
+def _lex_argmin(scores, mask):
+    """The reference selection: argmin over masked-in experts with the
+    same (score, index) tie-break fallback_choice uses."""
+    cand = [i for i in range(len(scores)) if mask[i]]
+    return min(cand, key=lambda i: (scores[i], i))
+
+
+# ------------------------------------------------- fallback_choice rule
+
+
+def _check_masked_rescore(seed):
+    """Non-degraded fallback == lexicographic argmin over available
+    experts of the *same* scores, bit-for-bit; degraded mode == first
+    healthy expert in the escalation order."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(2, 7))
+    scores = rng.normal(size=m)
+    if rng.random() < 0.3:                # exercise exact-tie paths
+        scores = np.round(scores)
+    healthy = rng.random(m) < 0.7
+    overloaded = rng.random(m) < 0.3
+    available = healthy & ~overloaded
+    choice = int(rng.integers(m))
+    order = np.argsort(rng.permutation(m), kind="stable")
+    max_depth = int(rng.integers(0, m + 2))
+
+    final, depth, degraded = fallback_choice(
+        scores, healthy, available, choice, order, max_depth)
+
+    assert 0 <= final < m and depth >= 0
+    if max_depth <= 0 or available[choice]:
+        assert (final, depth, degraded) == (choice, 0, False)
+    elif not degraded:
+        assert available[final]
+        assert 1 <= depth <= max_depth
+        assert final == _lex_argmin(scores, available)
+    else:
+        expected = next((int(i) for i in order if healthy[i]),
+                        int(order[0]))
+        assert final == expected
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 10 ** 9))
+def test_fallback_choice_is_masked_rescore(seed):
+    _check_masked_rescore(seed)
+
+
+def test_fallback_choice_masked_rescore_sweep():
+    """Deterministic stand-in for the hypothesis property when
+    hypothesis is unavailable: the same check over a fixed seed grid."""
+    for seed in range(300):
+        _check_masked_rescore(seed)
+
+
+def test_fallback_choice_depth_counts_walk():
+    scores = np.array([0.0, 1.0, 2.0, 3.0])
+    order = np.arange(4)
+    ok = np.array([True] * 4)
+    # choice unavailable, cheapest alternative available: one step
+    avail = np.array([False, True, True, True])
+    assert fallback_choice(scores, ok, avail, 0, order, 3) == (1, 1, False)
+    # two cheapest unavailable: two steps to reach index 2
+    avail = np.array([False, False, True, True])
+    assert fallback_choice(scores, ok, avail, 0, order, 3) == (2, 2, False)
+    # nothing available: degraded to the smallest healthy expert
+    avail = np.zeros(4, bool)
+    final, depth, degraded = fallback_choice(scores, ok, avail, 0, order, 3)
+    assert degraded and final == 0
+
+
+# --------------------------------------------------- all-healthy parity
+
+
+@pytest.mark.parametrize("discipline", ["run", "serve"])
+def test_all_healthy_engine_matches_health_unaware(tiny_library,
+                                                   router_params,
+                                                   discipline):
+    """Health tracker attached + every expert healthy == health=None
+    engine, bit-for-bit: identical Results (fallback_depth=0 throughout)
+    and identical EngineStats."""
+    outs, stats = [], []
+    for health in (None, ExpertHealth(3, now_fn=Clock())):
+        clock = Clock()
+        eng = _engine(tiny_library, router_params, clock, lane_target=8,
+                      max_wait_s=1e9, health=health)
+        reqs = _requests(96, seed=3, n_unique=64)
+        if discipline == "run":
+            for r in reqs:
+                eng.submit(r)
+            out = eng.run()
+        else:
+            out = list(eng.serve(iter(reqs)))
+        outs.append(sorted(out, key=lambda r: r.uid))
+        stats.append(eng.stats.summary())
+    for a, b in zip(*outs):
+        assert _result_key(a) == _result_key(b)
+        assert a.fallback_depth == 0 and not a.failed
+    assert stats[0] == stats[1]
+    assert stats[0]["fallback"]["fallbacks"] == 0
+
+
+# ------------------------------------------------ route-time fallback
+
+
+def test_route_time_fallback_matches_host_rescore(tiny_library,
+                                                  router_params):
+    """With one expert forced down, every admitted request's choice is
+    bit-for-bit the masked re-score argmin under its own lambdas, and
+    the Results carry the fallback depth."""
+    clock = Clock()
+    health = ExpertHealth(3, now_fn=clock)
+    eng = _engine(tiny_library, router_params, clock, health=health,
+                  fallback_max_depth=2)
+    reqs = _requests(64, seed=5)
+
+    # reference picks before any health signal
+    pred, choice0 = eng._score_batch(reqs)
+    scores = pred + lambda_matrix(reqs, eng._cnames) @ eng._cmat
+    down = int(np.bincount(np.asarray(choice0), minlength=3).argmax())
+    health.force_down(down)
+
+    mask = np.ones(3, bool)
+    mask[down] = False
+    for r in reqs:
+        eng.submit(r)
+    results = sorted(eng.run(), key=lambda r: r.uid)
+    assert len(results) == 64
+    names = [e.name for e in tiny_library.experts]
+    moved = 0
+    for i, res in enumerate(results):
+        expected = (_lex_argmin(scores[i], mask)
+                    if int(choice0[i]) == down else int(choice0[i]))
+        assert res.expert == names[expected]
+        if int(choice0[i]) == down:
+            moved += 1
+            assert res.fallback_depth >= 1
+        else:
+            assert res.fallback_depth == 0
+    assert moved > 0
+    assert eng.stats.fallbacks == moved
+    assert eng.stats.degraded == 0
+
+
+def test_fallback_applies_to_cache_hits(tiny_library, router_params):
+    """Health is time-varying and must never be memoised: a cached
+    verdict whose expert has since gone down is re-routed at admission,
+    still counting as a cache hit."""
+    clock = Clock()
+    health = ExpertHealth(3, now_fn=clock)
+    eng = _engine(tiny_library, router_params, clock, health=health)
+    req = _requests(1, seed=11)[0]
+    eng.submit(req)
+    first = eng.run()[0]
+    assert not first.cached
+    names = [e.name for e in tiny_library.experts]
+    health.force_down(names.index(first.expert))
+    eng.submit(_requests(1, seed=11)[0])
+    second = eng.run()[0]
+    assert second.cached                      # the verdict was memoised
+    assert second.expert != first.expert      # ...but health re-applied
+    assert second.fallback_depth >= 1
+
+
+# ------------------------------------------------- failed-flush paths
+
+
+def test_failed_flush_reroutes_with_fallback(tiny_library, router_params):
+    """A persistent failure injection on the hot expert: every request
+    still gets served (re-routed, monotone fallback_depth), the health
+    tracker records the failures, and nothing fails terminally."""
+    clock = Clock()
+    health = ExpertHealth(3, now_fn=clock)
+    eng = _engine(tiny_library, router_params, clock, lane_target=8,
+                  max_wait_s=1e9, health=health, fallback_max_depth=2)
+    reqs = _requests(64, seed=5)
+    _, choice0 = eng._score_batch(reqs)
+    hot = int(np.bincount(np.asarray(choice0), minlength=3).argmax())
+    hot_name = tiny_library.experts[hot].name
+
+    def stream():
+        for i, r in enumerate(reqs):
+            if i == 0:
+                eng.scheduler.inject_failures(hot)   # every flush fails
+            yield r
+
+    results = sorted(eng.serve(stream()), key=lambda r: r.uid)
+    assert len(results) == 64
+    assert all(not r.failed for r in results)
+    assert all(r.expert != hot_name for r in results)
+    rerouted = [r for r in results if r.fallback_depth > 0]
+    assert rerouted
+    assert eng.stats.reroutes > 0
+    assert eng.stats.failed == 0
+    assert eng.stats.expert_failures[hot_name] >= 1
+    assert not health.healthy(hot)
+    assert eng.stats.served == 64
+
+
+def test_failed_flush_without_fallback_fails_terminally(tiny_library,
+                                                        router_params):
+    """The health-unaware baseline: the same injection turns the hot
+    expert's requests into terminal failed Results."""
+    clock = Clock()
+    eng = _engine(tiny_library, router_params, clock, lane_target=8,
+                  max_wait_s=1e9)
+    reqs = _requests(64, seed=5)
+    _, choice0 = eng._score_batch(reqs)
+    hot = int(np.bincount(np.asarray(choice0), minlength=3).argmax())
+    n_hot = int((np.asarray(choice0) == hot).sum())
+    hot_name = tiny_library.experts[hot].name
+
+    def stream():
+        for i, r in enumerate(reqs):
+            if i == 0:
+                eng.scheduler.inject_failures(hot)
+            yield r
+
+    results = sorted(eng.serve(stream()), key=lambda r: r.uid)
+    assert len(results) == 64
+    failed = [r for r in results if r.failed]
+    assert len(failed) == n_hot > 0
+    for r in failed:
+        assert r.expert == hot_name
+        assert r.flush_reason == "failed"
+        assert r.predictions.size == 0 and r.loss is None
+    assert eng.stats.failed == n_hot
+    assert eng.stats.served == 64 - n_hot
+
+
+def test_bounded_injection_recovers(tiny_library, router_params):
+    """count=1 arms exactly one failure: the first flush of the lane
+    fails, later flushes succeed."""
+    clock = Clock()
+    health = ExpertHealth(3, cooldown_s=0.0, failure_alpha=0.4,
+                          now_fn=clock)
+    eng = _engine(tiny_library, router_params, clock, lane_target=4,
+                  max_wait_s=1e9, health=health, fallback_max_depth=2)
+    reqs = _requests(64, seed=5)
+
+    def stream():
+        for i, r in enumerate(reqs):
+            if i == 0:
+                eng.scheduler.inject_failures(0, count=1)
+            yield r
+
+    results = list(eng.serve(stream()))
+    assert len(results) == 64
+    assert all(not r.failed for r in results)
+    assert eng.stats.expert_failures[tiny_library.experts[0].name] <= 1

@@ -1,0 +1,217 @@
+"""Serving front end: admission-queue shed policy, round-robin session
+multiplexing, and the ample-capacity parity contract against plain
+``engine.serve()``.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.objective import recency_constraint, size_constraint
+from repro.core.router import RouterConfig, init_router
+from repro.data.batching import mlm_batch
+from repro.serving import (AdmissionQueue, Request, ServingFrontend,
+                           Session, TryageEngine)
+
+RC = RouterConfig(n_models=3, vocab_size=64, num_layers=1, d_model=32,
+                  num_heads=2, d_ff=64)
+
+
+class Clock:
+    def __init__(self, t=1.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def router_params():
+    rp, _ = init_router(jax.random.PRNGKey(9), RC)
+    return rp
+
+
+def _requests(n, seed=0, priority=None):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(4, 64, size=(n, 32)).astype(np.int32)
+    mb = mlm_batch(toks, rng, 0.2, 64)
+    mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
+    return [Request(uid=i, tokens=mb["tokens"][i], targets=mb["targets"][i],
+                    mask=mb["mask"][i], lambdas=mix[i % len(mix)],
+                    priority=i % 3 if priority is None else priority)
+            for i in range(n)]
+
+
+def _engine(library, params, clock, **kw):
+    cons = [size_constraint(library), recency_constraint(library)]
+    kw.setdefault("max_batch", 32)
+    return TryageEngine(library, params, RC, cons, now_fn=clock, **kw)
+
+
+def _result_key(r):
+    d = dataclasses.asdict(r)
+    d["pred_losses"] = d["pred_losses"].tobytes()
+    d["predictions"] = d["predictions"].tobytes()
+    return d
+
+
+def _stub(uid, priority):
+    """Queue-level tests never touch the router, so token payloads can
+    be empty."""
+    z = np.zeros(0, np.int32)
+    return Request(uid=uid, tokens=z, targets=z, mask=np.zeros(0, bool),
+                   priority=priority)
+
+
+# ----------------------------------------------------- admission queue
+
+
+def test_queue_admits_fifo_under_capacity():
+    q = AdmissionQueue(4)
+    for i in range(4):
+        assert q.offer(_stub(i, priority=i)) is None
+    assert len(q) == 4 and q.peak == 4
+    assert [q.pop().uid for _ in range(4)] == [0, 1, 2, 3]
+    assert q.pop() is None
+
+
+def test_queue_sheds_incoming_on_tie():
+    """At capacity with equal priorities, the newest request loses —
+    queued work is never displaced by an equal."""
+    q = AdmissionQueue(2)
+    q.offer(_stub(0, 1))
+    q.offer(_stub(1, 1))
+    shed = q.offer(_stub(2, 1))
+    assert shed is not None and shed.uid == 2
+    assert [q.pop().uid, q.pop().uid] == [0, 1]
+
+
+def test_queue_sheds_lower_priority_incoming():
+    q = AdmissionQueue(2)
+    q.offer(_stub(0, 5))
+    q.offer(_stub(1, 5))
+    shed = q.offer(_stub(2, 1))
+    assert shed.uid == 2
+
+
+def test_queue_evicts_oldest_lowest_priority_for_higher():
+    """A higher-priority arrival displaces the oldest queued request at
+    the minimum priority; FIFO order among survivors is preserved."""
+    q = AdmissionQueue(3)
+    q.offer(_stub(0, 1))
+    q.offer(_stub(1, 0))
+    q.offer(_stub(2, 0))          # two at the minimum: uid 1 is oldest
+    shed = q.offer(_stub(3, 2))
+    assert shed.uid == 1
+    assert [q.pop().uid for _ in range(3)] == [0, 2, 3]
+
+
+def test_queue_peak_tracks_high_water_mark():
+    q = AdmissionQueue(8)
+    for i in range(5):
+        q.offer(_stub(i, 0))
+    for _ in range(5):
+        q.pop()
+    q.offer(_stub(9, 0))
+    assert q.peak == 5 and len(q) == 1
+
+
+def test_queue_capacity_validation():
+    with pytest.raises(AssertionError):
+        AdmissionQueue(0)
+
+
+# ------------------------------------------------------- multiplexing
+
+
+def test_frontend_round_robin_interleaves(tiny_library, router_params):
+    """One item per live session per sweep: session order in the
+    admitted stream interleaves rather than draining one session
+    first."""
+    clock = Clock()
+    eng = _engine(tiny_library, router_params, clock)
+    reqs = _requests(6, priority=0)
+    sess = [Session("a", reqs[0:3]), Session("b", reqs[3:6])]
+    fe = ServingFrontend(eng, sess, capacity=16)
+    admitted = [r.uid for r in fe._multiplex() if r is not None]
+    assert admitted == [0, 3, 1, 4, 2, 5]
+    assert eng.stats.admitted == 6 and eng.stats.sessions == 2
+
+
+def test_frontend_skips_idle_ticks_and_yields_none(tiny_library,
+                                                   router_params):
+    """``None`` items in a session are idle ticks: not admitted, but a
+    sweep with nothing due still yields ``None`` so deadline flushes can
+    fire."""
+    clock = Clock()
+    eng = _engine(tiny_library, router_params, clock)
+    reqs = _requests(2, priority=0)
+    sess = [Session("a", [None, reqs[0], None, None, reqs[1]])]
+    out = list(ServingFrontend(eng, sess, capacity=4)._multiplex())
+    uids = [r.uid for r in out if r is not None]
+    assert uids == [0, 1]
+    assert out.count(None) == 3       # the sweeps where nothing was due
+
+
+def test_frontend_stamps_arrival_time(tiny_library, router_params):
+    clock = Clock(t=7.5)
+    eng = _engine(tiny_library, router_params, clock)
+    req = _requests(1, priority=0)[0]
+    assert req.arrival is None
+    fe = ServingFrontend(eng, [Session("a", [req])], capacity=4)
+    out = [r for r in fe._multiplex() if r is not None]
+    assert out[0].arrival == 7.5
+
+
+def test_frontend_sheds_and_accounts(tiny_library, router_params):
+    """Capacity 1 with a 4-deep burst in one sweep: the three
+    lowest-priority requests shed, counted by priority, and never reach
+    the engine."""
+    clock = Clock()
+    eng = _engine(tiny_library, router_params, clock)
+    reqs = [_stub(0, 0), _stub(1, 2), _stub(2, 1), _stub(3, 0)]
+    # all four arrive before the first pop: one session each
+    sess = [Session(f"s{i}", [r]) for i, r in enumerate(reqs)]
+    fe = ServingFrontend(eng, sess, capacity=1)
+    admitted = [r.uid for r in fe._multiplex() if r is not None]
+    assert admitted == [1]            # only the priority-2 request
+    assert eng.stats.shed == 3
+    assert eng.stats.admitted == 1
+    assert dict(eng.stats.shed_by_priority) == {0: 2, 1: 1}
+    assert sorted(fe.shed_uids) == [0, 2, 3]
+
+
+# ------------------------------------------------------------- parity
+
+
+def test_frontend_ample_capacity_matches_plain_serve(tiny_library,
+                                                     router_params):
+    """With capacity well above the burst size, the frontend is a pure
+    reordering-free relay: identical Results and identical engine stats
+    (modulo the frontend's own counters) vs plain ``engine.serve()``
+    over the same requests in the same order."""
+    outs, summaries = [], []
+    for use_frontend in (False, True):
+        clock = Clock()
+        eng = _engine(tiny_library, router_params, clock, lane_target=8,
+                      max_wait_s=1e9)
+        reqs = _requests(48, seed=3)
+        if use_frontend:
+            fe = ServingFrontend(eng, [Session("all", reqs)], capacity=256)
+            out = list(fe.serve())
+            assert fe.shed_uids == []
+        else:
+            out = list(eng.serve(iter(reqs)))
+        outs.append(sorted(out, key=lambda r: r.uid))
+        s = eng.stats.summary()
+        summaries.append(s)
+    for a, b in zip(*outs):
+        assert _result_key(a) == _result_key(b)
+    sf, sp = summaries[1], summaries[0]
+    assert sf["frontend"]["shed"] == 0
+    for key in sp:
+        if key == "frontend":
+            continue
+        assert sf[key] == sp[key]

@@ -1,0 +1,148 @@
+"""ExpertHealth: the circuit-breaker state machine and its signals.
+
+Pure host-side unit tests on a deterministic injected clock — no JAX,
+no engine.  The engine-level integration (fallback routing, failure
+re-routes) lives in tests/test_fallback.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serving import ExpertHealth
+
+
+class Clock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture
+def clock():
+    return Clock()
+
+
+@pytest.fixture
+def health(clock):
+    return ExpertHealth(3, cooldown_s=10.0, now_fn=clock)
+
+
+def test_fresh_tracker_all_available(health):
+    assert health.healthy_mask().all()
+    assert health.available_mask().all()
+    for i in range(3):
+        assert health.healthy(i) and not health.overloaded(i)
+
+
+def test_single_failure_trips_breaker(health):
+    """failure_alpha=0.5 means one failure lands the EWMA exactly on the
+    0.5 threshold — immediately unhealthy."""
+    health.record_failure(1)
+    assert not health.healthy(1)
+    assert health.healthy(0) and health.healthy(2)
+    assert list(health.available_mask()) == [True, False, True]
+    assert health.states[1].failures == 1
+
+
+def test_cooldown_holds_breaker_open(health, clock):
+    """Even after successful flushes decay the failure EWMA below
+    threshold, the expert stays unhealthy until cooldown_s has passed
+    since the last failure."""
+    health.record_failure(0)
+    for _ in range(4):
+        health.observe_flush(0, 0.01, ok=True)
+    assert health.states[0].failure_ewma < health.fail_threshold
+    clock.t = 9.9
+    assert not health.healthy(0)          # still inside the cooldown
+    clock.t = 10.1
+    assert health.healthy(0)              # cooldown expired, EWMA low
+
+
+def test_breaker_reopens_on_next_failure(health, clock):
+    health.record_failure(0)
+    clock.t = 50.0
+    for _ in range(4):
+        health.observe_flush(0, 0.01, ok=True)
+    assert health.healthy(0)
+    health.record_failure(0)              # half-open -> open again
+    assert not health.healthy(0)
+    clock.t = 59.9
+    assert not health.healthy(0)
+
+
+def test_persistent_failures_keep_ewma_high(health, clock):
+    for _ in range(5):
+        health.record_failure(2)
+    clock.t = 1e6                         # far past any cooldown
+    assert not health.healthy(2)          # EWMA alone keeps it open
+    assert health.states[2].failure_ewma > health.fail_threshold
+
+
+def test_force_down_and_release(health):
+    health.force_down(1)
+    assert not health.healthy(1) and not health.available(1)
+    health.force_down(1, down=False)
+    assert health.healthy(1)
+
+
+def test_overload_is_depth_ewma_threshold(clock):
+    h = ExpertHealth(2, overload_depth=8.0, depth_alpha=1.0, now_fn=clock)
+    h.observe_lane_depth(0, 10)
+    assert h.overloaded(0) and not h.overloaded(1)
+    # overloaded but not failed: unhealthy is False, available is False
+    assert h.healthy(0) and not h.available(0)
+    # idle observations decay the EWMA back under the threshold
+    h.observe_lane_depth(0, 0)
+    assert not h.overloaded(0) and h.available(0)
+
+
+def test_ewma_arithmetic(clock):
+    h = ExpertHealth(1, depth_alpha=0.5, latency_alpha=0.5, now_fn=clock)
+    h.observe_lane_depth(0, 4)
+    h.observe_lane_depth(0, 8)
+    assert h.states[0].depth_ewma == pytest.approx(0.5 * 2.0 + 0.5 * 8.0)
+    h.observe_flush(0, 0.1)
+    h.observe_flush(0, 0.3)
+    assert h.states[0].latency_ewma_s == pytest.approx(0.5 * 0.05 + 0.15)
+    assert h.states[0].flushes == 2
+
+
+def test_failed_flush_does_not_pollute_latency(health):
+    health.observe_flush(0, 0.2, ok=True)
+    lat = health.states[0].latency_ewma_s
+    health.observe_flush(0, 99.0, ok=False)
+    assert health.states[0].latency_ewma_s == lat
+    assert health.states[0].flushes == 1
+    assert health.states[0].failures == 1
+
+
+def test_masks_are_bool_arrays(health):
+    health.record_failure(2)
+    hm, am = health.healthy_mask(), health.available_mask()
+    assert hm.dtype == np.bool_ and am.dtype == np.bool_
+    assert hm.shape == am.shape == (3,)
+    assert not hm[2] and not am[2]
+
+
+def test_snapshot_shape_and_keys(health):
+    health.record_failure(1)
+    health.observe_lane_depth(0, 3)
+    snap = health.snapshot()
+    assert len(snap) == 3
+    for entry in snap:
+        assert set(entry) == {"healthy", "overloaded", "depth_ewma",
+                              "latency_ewma_s", "failure_ewma", "flushes",
+                              "failures", "forced_down"}
+    assert snap[1]["healthy"] is False
+    assert snap[0]["depth_ewma"] > 0
+
+
+def test_constructor_validation():
+    with pytest.raises(AssertionError):
+        ExpertHealth(0)
+    with pytest.raises(AssertionError):
+        ExpertHealth(2, failure_alpha=0.0)
+    with pytest.raises(AssertionError):
+        ExpertHealth(2, depth_alpha=1.5)

@@ -1,0 +1,69 @@
+"""docs/METRICS.md <-> serving.metrics registry parity.
+
+The markdown table between the ``metrics-table-start``/``-end`` markers
+must list exactly the registry's series — same names, same order, same
+types, labels, and sources.  A registry edit without the matching doc
+edit (or vice versa) fails here.
+
+Import-light on purpose (no JAX): this test also runs in the CI docs
+job.
+"""
+
+import pathlib
+import re
+
+import pytest
+
+from repro.serving.metrics import METRICS, metric_names
+
+DOC = pathlib.Path(__file__).resolve().parent.parent / "docs" / "METRICS.md"
+
+
+@pytest.fixture(scope="module")
+def table_rows():
+    text = DOC.read_text()
+    m = re.search(r"<!-- metrics-table-start -->\n(.*?)"
+                  r"<!-- metrics-table-end -->", text, re.DOTALL)
+    assert m, "metrics table markers missing from docs/METRICS.md"
+    lines = [ln for ln in m.group(1).strip().splitlines()
+             if ln.startswith("|")]
+    header, sep, *rows = lines
+    assert [c.strip() for c in header.strip("|").split("|")] == \
+        ["Name", "Type", "Labels", "Source", "Meaning"]
+    assert set(sep) <= {"|", "-", " "}
+    parsed = []
+    for row in rows:
+        cells = [c.strip() for c in row.strip("|").split("|")]
+        assert len(cells) == 5, f"malformed row: {row}"
+        parsed.append(cells)
+    return parsed
+
+
+def _unticked(cell):
+    assert cell.startswith("`") and cell.endswith("`"), \
+        f"expected backticked cell: {cell}"
+    return cell[1:-1]
+
+
+def test_table_names_match_registry_in_order(table_rows):
+    assert [_unticked(r[0]) for r in table_rows] == metric_names()
+
+
+def test_table_types_labels_sources_match_registry(table_rows):
+    for row, spec in zip(table_rows, METRICS):
+        name = _unticked(row[0])
+        assert name == spec.name
+        assert row[1] == spec.mtype, f"{name}: type drift"
+        labels = "-" if not spec.labels else ", ".join(spec.labels)
+        assert row[2] == labels, f"{name}: labels drift"
+        assert _unticked(row[3]) == spec.source, f"{name}: source drift"
+
+
+def test_table_meanings_match_registry_help(table_rows):
+    for row, spec in zip(table_rows, METRICS):
+        assert row[4] == spec.help, f"{spec.name}: help-string drift"
+
+
+def test_doc_mentions_every_series_once(table_rows):
+    names = [_unticked(r[0]) for r in table_rows]
+    assert len(names) == len(set(names))

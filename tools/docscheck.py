@@ -1,0 +1,127 @@
+"""Docs tree checker: every internal markdown link resolves (file and
+anchor) and every ``path/to/file.py:symbol`` code pointer names a real
+file containing that symbol.
+
+  python tools/docscheck.py                 # docs/*.md + README.md
+  python tools/docscheck.py docs/FOO.md     # explicit files
+
+Stdlib-only, so the CI docs job runs it without installing the package.
+Exit code is the number of broken references; each is printed as
+``file:line: message``.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+# `src/.../file.py:Symbol` or `file.py:Symbol.sub` inside backticks
+POINTER_RE = re.compile(r"`([\w./-]+\.py):([A-Za-z_][\w.]*)`")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading -> anchor: lowercase, drop punctuation,
+    spaces to hyphens."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading.strip())
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(md: pathlib.Path) -> set[str]:
+    out = set()
+    in_fence = False
+    for line in md.read_text().splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            out.add(slugify(m.group(1)))
+    return out
+
+
+def resolve_py(path_str: str, md: pathlib.Path) -> pathlib.Path | None:
+    """A code pointer's file part: repo-root-relative first, then
+    relative to the doc, then a unique basename match under src/."""
+    for base in (REPO, md.parent):
+        p = (base / path_str).resolve()
+        if p.is_file():
+            return p
+    hits = [p for p in REPO.glob(f"src/**/{path_str}") if p.is_file()]
+    return hits[0] if len(hits) == 1 else None
+
+
+def symbol_in(py: pathlib.Path, symbol: str) -> bool:
+    last = symbol.split(".")[-1]
+    text = py.read_text()
+    return re.search(
+        rf"^\s*(?:def|class)\s+{re.escape(last)}\b"
+        rf"|^\s*{re.escape(last)}\s*[:=]",
+        text, re.MULTILINE) is not None
+
+
+def check_file(md: pathlib.Path, anchor_cache: dict) -> list[str]:
+    errors = []
+    in_fence = False
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = md if not path_part else (md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md}:{lineno}: broken link: {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                if dest not in anchor_cache:
+                    anchor_cache[dest] = anchors_of(dest)
+                if anchor not in anchor_cache[dest]:
+                    errors.append(f"{md}:{lineno}: broken anchor: "
+                                  f"{target} (no heading '#{anchor}')")
+        for m in POINTER_RE.finditer(line):
+            path_str, symbol = m.groups()
+            py = resolve_py(path_str, md)
+            if py is None:
+                errors.append(f"{md}:{lineno}: code pointer to missing "
+                              f"file: {path_str}")
+            elif not symbol_in(py, symbol):
+                errors.append(f"{md}:{lineno}: symbol '{symbol}' not "
+                              f"found in {path_str}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        files = [pathlib.Path(a).resolve() for a in argv]
+    else:
+        files = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+    anchor_cache: dict = {}
+    errors = []
+    for md in files:
+        if not md.is_file():
+            errors.append(f"{md}: no such file")
+            continue
+        errors.extend(check_file(md, anchor_cache))
+    for e in errors:
+        print(e)
+    print(f"docscheck: {len(files)} file(s), {len(errors)} problem(s)")
+    return min(len(errors), 125)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
