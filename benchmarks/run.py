@@ -27,6 +27,12 @@ experiment is run automatically.
             engine must hold availability >= 0.99 while the health-
             unaware baseline degrades (per-window timeline written to
             experiments/tryage/slo_timeline.csv)
+  mesh      sharded Execute-stage scaling across simulated mesh sizes
+            1/2/4/8 (expert->slice placement + hot-expert replication):
+            simulated overlapped flushed-tokens/s at mesh size 4 must
+            be >= 3x size 1 and routing choices must not change
+            (per-size rows in experiments/tryage/mesh_scaling.csv;
+            run under XLA_FLAGS=--xla_force_host_platform_device_count=8)
 
 Benchmarks whose gates depend on artifact quality (``cascade``,
 ``drift``) fail fast with a regeneration hint when the cached
@@ -49,6 +55,10 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
+
+# --fast, visible to benchmarks that scale their own work (bench
+# functions only receive the artifact results); set once by main()
+_FAST = {"fast": False}
 
 
 def _results(fast: bool = False):
@@ -815,6 +825,146 @@ def bench_slo(res):
             f"{slo_s:g}s SLO")
 
 
+def bench_mesh(res):
+    """Sharded Execute-stage scaling across simulated mesh sizes.
+
+    One engine per mesh size (1, 2, 4, 8 devices; size 8 is a (2, 4)
+    mesh so the data-parallel routing path is exercised too, the rest
+    are (1, k)) serves the same 256-request mixed-flag workload over an
+    8-expert synthetic library.  Placement is traffic-aware: a prescan
+    of the routing choices feeds ``plan_placement`` so the greedy LPT
+    assignment balances *expected compute*, and the two hottest experts
+    are replicated onto every slice (flushes pick the least-busy
+    replica stream).
+
+    Throughput is *simulated overlapped* flushed-tokens/s: each flush's
+    measured wall time is charged to the device stream it was
+    dispatched to (``serving.placement.StreamClock``), and the makespan
+    is the busiest stream's total — what a real multi-device runtime,
+    which genuinely overlaps independent per-device programs, would
+    take.  One physical CPU executes the streams serially, so raw wall
+    time cannot show the overlap; the per-stream accounting can, and
+    the per-flush numerics are identical either way (committed
+    single-device execution).
+
+    Gates: simulated flushed-tokens/s at mesh size 4 must be >= 3x mesh
+    size 1, and routing choices must be identical across all sizes.
+    Per-size rows land in ``experiments/tryage/mesh_scaling.csv`` (CI
+    uploads it).  Needs >= 4 visible devices for the gate — run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; sizes the
+    host cannot back are skipped (reported, not failed).
+    """
+    import jax
+    from repro.core import experiment as ex
+    from repro.core.library import ExpertSpec, ModelLibrary, _enc
+    from repro.core.objective import recency_constraint, size_constraint
+    from repro.core.router import RouterConfig, init_router
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import count_params, init_model
+    from repro.serving import Request, TryageEngine
+    from repro.serving.placement import plan_placement
+
+    M, n, S = 8, 256, 64
+    specs = []
+    for i in range(M):
+        d = 32 + 16 * (i % 4)
+        layers = 1 + i // 4
+        specs.append(ExpertSpec(f"e{i}", _enc(f"e{i}", layers, d, 2,
+                                              2 * d, S), {},
+                                0.5 + 0.05 * i))
+    lib = ModelLibrary(specs)
+    for i, e in enumerate(lib.experts):
+        e.params, _ = init_model(jax.random.PRNGKey(i), e.cfg)
+        e.n_params = count_params(e.params)
+    rc = RouterConfig(n_models=M, vocab_size=64, num_layers=1, d_model=32,
+                      num_heads=2, d_ff=64)
+    rp, _ = init_router(jax.random.PRNGKey(9), rc)
+    cons = [size_constraint(lib), recency_constraint(lib)]
+
+    rng = np.random.default_rng(0)
+    toks = rng.integers(4, 64, size=(n, S)).astype(np.int32)
+    flag_mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
+
+    def workload():
+        return [Request(uid=i, tokens=toks[i],
+                        lambdas=flag_mix[i % len(flag_mix)])
+                for i in range(n)]
+
+    # traffic prescan: the routing choices the workload will actually
+    # make, so placement balances expected compute (sizes alone would
+    # balance resident bytes while the router concentrates traffic)
+    scout = TryageEngine(lib, rp, rc, cons, max_batch=32, use_kernel=True,
+                         decision_cache=False)
+    w = workload()
+    picks = np.concatenate([scout._score_batch(w[i:i + 32])[1]
+                            for i in range(0, n, 32)])
+    traffic = np.bincount(picks, minlength=M) / float(n)
+    sizes = [e.n_params for e in lib.experts]
+
+    all_sizes = [1, 2, 4] if _FAST["fast"] else [1, 2, 4, 8]
+    shapes = {1: (1, 1), 2: (1, 2), 4: (1, 4), 8: (2, 4)}
+    have = jax.device_count()
+    runnable = [k for k in all_sizes if k <= have]
+    for k in sorted(set(all_sizes) - set(runnable)):
+        yield (f"mesh/size{k}_skipped", 1.0,
+               f"needs {k} devices, have {have} — set XLA_FLAGS="
+               f"--xla_force_host_platform_device_count=8")
+
+    tput, choices, csv_rows = {}, {}, []
+    for k in runnable:
+        data, model = shapes[k]
+        mesh = make_host_mesh(data, model)
+        placement = plan_placement(sizes, model, replicate_hot=2,
+                                   traffic=traffic)
+        eng = TryageEngine(lib, rp, rc, cons, max_batch=32,
+                           use_kernel=True, decision_cache=False,
+                           lane_target=8, max_wait_s=10.0, mesh=mesh,
+                           placement=placement)
+        list(eng.serve(iter(workload())))    # warm the routing path
+        eng.warm_mesh(S)                     # compile every (expert,
+        eng.streams.reset()                  # device, bucket) variant
+        t0 = time.time()
+        results = list(eng.serve(iter(workload())))
+        wall = time.time() - t0
+        assert len(results) == n
+        choices[k] = [r.expert for r in sorted(results,
+                                               key=lambda r: r.uid)]
+        st = eng.streams
+        tokens = sum(st.tokens)
+        tput[k] = tokens / st.makespan_s
+        csv_rows.append((k, st.n_streams, tokens, st.makespan_s,
+                         st.total_busy_s, tput[k], wall))
+        yield (f"mesh/size{k}_tokens_per_s", tput[k],
+               f"simulated overlap, {data}x{model} mesh")
+        yield (f"mesh/size{k}_makespan_s", st.makespan_s,
+               "busiest stream")
+
+    os.makedirs(ex.ART_DIR, exist_ok=True)
+    csv_path = os.path.normpath(
+        os.path.join(ex.ART_DIR, "mesh_scaling.csv"))
+    with open(csv_path, "w") as f:
+        f.write("mesh_size,streams,tokens,makespan_s,total_busy_s,"
+                "tokens_per_s,wall_s\n")
+        for row in csv_rows:
+            f.write(",".join(f"{v:.6g}" if isinstance(v, float) else str(v)
+                             for v in row) + "\n")
+    yield ("mesh/scaling_csv", 1.0, csv_path)
+
+    base = runnable[0]
+    match = float(all(choices[k] == choices[base] for k in runnable))
+    yield ("mesh/choice_match", match, "across mesh sizes, must be 1")
+    if match != 1.0:
+        raise RuntimeError("mesh: routing choices diverged across mesh "
+                           "sizes — placement must never change routing")
+    if 4 in tput and 1 in tput:
+        ratio = tput[4] / tput[1]
+        yield ("mesh/scaling_4x", ratio, "size 4 vs 1, must be >= 3")
+        if ratio < 3.0:
+            raise RuntimeError(
+                f"mesh: simulated flushed-tokens/s at mesh size 4 is "
+                f"only {ratio:.2f}x size 1 (need >= 3x)")
+
+
 # (name, fn, needs_experiment_artifacts)
 BENCHES = [
     ("fig2", bench_fig2, True),
@@ -832,6 +982,7 @@ BENCHES = [
     ("cascade", bench_cascade, True),
     ("drift", bench_drift, True),
     ("slo", bench_slo, False),
+    ("mesh", bench_mesh, False),
 ]
 
 
@@ -844,11 +995,13 @@ def main(argv=None) -> None:
                     help="also write the CSV rows to this file")
     ap.add_argument("--fast", action="store_true",
                     help="smaller fallback experiment when artifacts are "
-                         "missing")
+                         "missing; self-scaling benchmarks (mesh) also "
+                         "shrink")
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero if any selected benchmark errors "
                          "(CI smoke mode)")
     args = ap.parse_args(argv)
+    _FAST["fast"] = args.fast
 
     selected = [x.strip() for x in args.only.split(",") if x.strip()]
     unknown = set(selected) - {name for name, _, _ in BENCHES}

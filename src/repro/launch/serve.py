@@ -9,6 +9,7 @@ drive the streaming API with a Poisson arrival simulator.
       [--drift-after 128 --drift-domains github,dm_math] \
       [--sessions 4 --admission-cap 256] [--fallback-depth 2] \
       [--fail-expert small --fail-after 64] \
+      [--mesh 2,4 --replicate-hot 1] \
       [--metrics-port 9109] [--metrics-out metrics.prom]
 
 By default requests flow through ``TryageEngine.serve`` — the
@@ -55,6 +56,15 @@ admitted — with fallback on, traffic re-routes around it; with
 --metrics-port P serves Prometheus text metrics at
 http://127.0.0.1:P/metrics for the duration of the run; --metrics-out
 FILE writes a final scrape to FILE.  See docs/OPERATIONS.md.
+
+Mesh serving: --mesh DATA,MODEL builds a (data, model) device mesh
+(``launch.mesh.make_host_mesh``) — the routing stage shards admission
+batches over the data axis and each expert is placed on a model-axis
+slice (``serving.placement``; greedy size-balanced, --replicate-hot K
+replicates the K hottest experts everywhere), so lane flushes overlap
+in per-device streams.  The summary JSON gains a "mesh" block with the
+placement and per-stream busy times.  On CPU, simulate devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 
 from __future__ import annotations
@@ -157,6 +167,17 @@ def main():
     ap.add_argument("--fail-after", type=int, default=0,
                     help="admitted-request count that triggers "
                          "--fail-expert")
+    ap.add_argument("--mesh", type=str, default="", metavar="DATA,MODEL",
+                    help="serve on a (data, model) device mesh: the "
+                         "routing stage shards admission batches over "
+                         "DATA devices and experts are placed on MODEL "
+                         "slices (e.g. --mesh 2,4 on 8 devices; needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N on CPU)")
+    ap.add_argument("--replicate-hot", type=int, default=0, metavar="K",
+                    help="with --mesh, replicate the K hottest experts "
+                         "onto every model slice (flushes pick the "
+                         "least-busy replica stream)")
     ap.add_argument("--metrics-port", type=int, default=0, metavar="P",
                     help="serve Prometheus text metrics on "
                          "http://127.0.0.1:P/metrics during the run "
@@ -199,6 +220,16 @@ def main():
         print("calibrating uncertainty head on held-out Q-table", flush=True)
         rp = calibrate_uncertainty(rp, rc, art["test_tokens"],
                                    art["q_test"]["loss"])
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+        try:
+            mdata, mmodel = (int(x) for x in args.mesh.split(","))
+        except ValueError:
+            ap.error("--mesh expects two integers 'data,model'")
+        mesh = make_host_mesh(mdata, mmodel)
+    elif args.replicate_hot:
+        ap.error("--replicate-hot needs --mesh")
     health = (ExpertHealth(len(lib))
               if args.fallback_depth > 0 or args.fail_expert else None)
     eng = TryageEngine(lib, rp, rc,
@@ -214,7 +245,13 @@ def main():
                        adapt_lr=args.adapt_lr,
                        replay_cap=args.replay_cap,
                        health=health,
-                       fallback_max_depth=args.fallback_depth)
+                       fallback_max_depth=args.fallback_depth,
+                       mesh=mesh,
+                       replicate_hot=args.replicate_hot)
+    if mesh is not None:
+        # pre-compile every (expert, replica device, bucket) variant so
+        # dispatch never eats a compile inside measured traffic
+        eng.warm_mesh(args.seq)
 
     rng = np.random.default_rng(0)
     uniform = {d: 1.0 / 8 for d in corpus.tables}
@@ -319,6 +356,7 @@ def main():
         "sessions": args.sessions,
         "fallback_depth": args.fallback_depth,
         "fail_expert": args.fail_expert or None,
+        "mesh": eng.mesh_summary(),
         "wall_s": round(dt, 2),
         "req_per_s": round(len(results) / dt, 1),
         "mean_mlm_accuracy": round(float(np.mean(accs)), 4),

@@ -73,6 +73,10 @@ class DecisionCache:
         )
 
     def get(self, key: tuple) -> tuple[np.ndarray, int, int, float] | None:
+        """Return the memoised verdict (refreshing LRU recency) or None.
+
+        The ``pred`` row is the stored array itself — read-only by
+        construction (see ``put``), so sharing it is safe."""
         entry = self._entries.get(key)
         if entry is None:
             return None
@@ -87,8 +91,13 @@ class DecisionCache:
         depth: int = 0,
         confidence: float = 1.0,
     ) -> None:
+        # the stored pred row is handed back by reference on every hit;
+        # freeze it so a caller mutating a hit raises instead of silently
+        # corrupting all future hits for this key
+        stored = np.array(pred, np.float32)
+        stored.setflags(write=False)
         self._entries[key] = (
-            np.array(pred, np.float32),
+            stored,
             int(choice),
             int(depth),
             float(confidence),

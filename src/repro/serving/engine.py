@@ -107,8 +107,13 @@ from repro.serving.cache import DecisionCache
 from repro.serving.feedback import ReplayBuffer
 from repro.serving.health import ExpertHealth
 from repro.serving.pipeline import ServingPipeline
+from repro.serving.placement import (PlacementMap, StreamClock,
+                                     plan_placement)
 from repro.serving.requests import Request, Result, lambda_matrix
 from repro.serving.scheduler import ExpertScheduler, LaneEntry
+from repro.sharding.context import (activation_sharding, batch_sharding,
+                                    replicated_sharding)
+from repro.sharding.rules import DEFAULT_RULES
 
 
 def bucket_size(n: int) -> int:
@@ -307,6 +312,8 @@ class TryageEngine:
                  adapt_seed: int = 0,
                  health: ExpertHealth | None = None,
                  fallback_max_depth: int = 2,
+                 mesh=None, placement: PlacementMap | None = None,
+                 replicate_hot: int = 0,
                  now_fn: Callable[[], float] = time.monotonic):
         assert len(library) == rc.n_models
         if health is not None:
@@ -398,9 +405,148 @@ class TryageEngine:
                 lambda p, toks: predict_losses(p, rc, {"tokens": toks},
                                                use_kernel=False))
         self._expert_fns = {}
-        for e in library.experts:
+        self._expert_idx = {}
+        for i, e in enumerate(library.experts):
             self._expert_fns[e.name] = jax.jit(
                 functools.partial(self._expert_forward, cfg=e.cfg))
+            self._expert_idx[e.name] = i
+
+        # ------------------------------------------------ mesh wiring
+        # A (data, model) mesh makes the pipeline multi-device: the
+        # routing stage shards admission batches over the "data" axis,
+        # and the Execute stage places each expert on a "model"-axis
+        # slice (serving.placement) so lane flushes land in per-device
+        # streams that overlap instead of serializing on device 0.
+        # mesh=None (the default) is the single-device engine,
+        # bit-for-bit — none of the fields below are consulted.
+        self.mesh = mesh
+        self.placement: PlacementMap | None = None
+        self.streams: StreamClock | None = None
+        self._data_ext = 1
+        self._mesh_rp_cache: tuple[int, object] | None = None
+        if mesh is not None:
+            missing = {"data", "model"} - set(mesh.axis_names)
+            if missing:
+                raise ValueError(f"serving mesh needs axes "
+                                 f"('data', 'model'); missing {missing}")
+            self._data_ext = int(mesh.shape["data"])
+            model_ext = int(mesh.shape["model"])
+            if placement is None:
+                placement = plan_placement(
+                    [e.n_params for e in library.experts], model_ext,
+                    replicate_hot=replicate_hot)
+            if placement.n_slices != model_ext:
+                raise ValueError(f"placement has {placement.n_slices} "
+                                 f"slices but the mesh's model axis is "
+                                 f"{model_ext}")
+            if placement.n_experts != len(library):
+                raise ValueError("placement sized for a different library")
+            self.placement = placement
+            # device grid (data, model): slice k owns column k; stream
+            # index == flat device index r * model_ext + k
+            grid = np.asarray(mesh.devices).reshape(self._data_ext,
+                                                    model_ext)
+            self._devices = list(grid.reshape(-1))
+            self.streams = StreamClock(len(self._devices))
+            self._expert_streams = {
+                i: [r * model_ext + k
+                    for k in placement.slices_for(i)
+                    for r in range(self._data_ext)]
+                for i in range(len(library))}
+            # per-(expert, stream) committed parameter replicas, filled
+            # lazily on first dispatch so unused replicas cost nothing
+            self._expert_params_on: dict[tuple[int, int], object] = {}
+            if self._data_ext > 1:
+                if use_kernel:
+                    # GSPMD cannot partition pallas_call, so the fused
+                    # decision runs under shard_map: per-device blocks
+                    # of the batch through the same kernel, params
+                    # replicated (P() spec)
+                    from jax.experimental.shard_map import shard_map
+                    from jax.sharding import PartitionSpec as P
+                    cmat = self._cmat
+
+                    def _decide_sharded(p, toks, lam):
+                        emb = router_embed(p, rc, {"tokens": toks})
+                        return rs_ops.router_route(emb, p["head"], cmat,
+                                                   lam,
+                                                   interpret=interpret)
+
+                    self._decide_mesh = jax.jit(shard_map(
+                        _decide_sharded, mesh=mesh,
+                        in_specs=(P(), P("data", None), P("data", None)),
+                        out_specs=(P("data", None), P("data")),
+                        check_rep=False))
+                else:
+                    # GSPMD path: same predict_losses program, traced
+                    # under the activation-sharding context so
+                    # shard_act pins the batch axis through the encoder
+                    self._score_mesh = jax.jit(
+                        lambda p, toks: predict_losses(
+                            p, rc, {"tokens": toks}, use_kernel=False))
+
+    def _mesh_router_params(self):
+        """Router params replicated onto the serving mesh, re-put only
+        when adaptation swaps the version (device transfer once per
+        snapshot, not once per batch)."""
+        if (self._mesh_rp_cache is None
+                or self._mesh_rp_cache[0] != self.router_version):
+            rp = jax.device_put(self.router_params,
+                                replicated_sharding(self.mesh))
+            self._mesh_rp_cache = (self.router_version, rp)
+        return self._mesh_rp_cache[1]
+
+    def mesh_summary(self) -> dict | None:
+        """Placement + per-device stream telemetry (None without a
+        mesh).  Deliberately *not* part of ``EngineStats`` — the
+        1x1-mesh engine must stay bit-for-bit identical to the meshless
+        engine, EngineStats included."""
+        if self.mesh is None:
+            return None
+        names = [e.name for e in self.library.experts]
+        return {
+            "mesh": {k: int(v) for k, v in self.mesh.shape.items()},
+            "placement": self.placement.summary(names),
+            "streams": self.streams.summary(),
+        }
+
+    def warm_mesh(self, seq_len: int,
+                  bucket_sizes: Sequence[int] | None = None) -> int:
+        """Pre-place every expert replica and pre-compile every
+        (expert, replica device, bucket size) execution variant.
+
+        Flush dispatch picks the least-busy replica stream at flush
+        time, so which (expert, device) variants a warm *serving* pass
+        touches depends on wall-clock timings — a later flush can land
+        on a device whose program was never compiled and eat the
+        compile inside measured traffic.  Serving drivers and
+        ``bench_mesh`` call this once up front instead; it is a no-op
+        (returns 0) without a mesh.  Streams are not charged — warming
+        is not traffic."""
+        if self.placement is None:
+            return 0
+        if bucket_sizes is None:
+            bucket_sizes = [b for b in (1, 2, 4, 8, 16, 32, 64, 128)
+                            if b <= self.lane_target] or [self.lane_target]
+        compiled = 0
+        for ei, streams in self._expert_streams.items():
+            e = self.library[ei]
+            fn = self._expert_fns[e.name]
+            for slot in streams:
+                dev = self._devices[slot]
+                key = (ei, slot)
+                ep = self._expert_params_on.get(key)
+                if ep is None:
+                    ep = jax.device_put(e.params, dev)
+                    self._expert_params_on[key] = ep
+                for b in bucket_sizes:
+                    zi = np.zeros((b, seq_len), np.int32)
+                    preds, _, _ = fn(ep, jax.device_put(zi, dev),
+                                     jax.device_put(zi, dev),
+                                     jax.device_put(zi, dev))
+                    jax.block_until_ready(preds)
+                    compiled += 1
+        return compiled
 
     @property
     def router_params(self):
@@ -458,28 +604,66 @@ class TryageEngine:
         B = len(reqs)
         toks = np.stack([r.tokens for r in reqs])
         t0 = self._now()
+        data_par = self._data_ext > 1
         if self.use_kernel:
             # fused path: constraint add + argmin happen on-device inside
             # router_score_fused; pad to a bucket so the jit'd decision
             # function compiles once per bucket, not per ragged tail.
             lam = lambda_matrix(reqs, self._cnames)
             Bp = self._bucket(B)
+            if data_par and Bp % self._data_ext:
+                # shard_map needs the batch divisible by the data axis
+                Bp += self._data_ext - Bp % self._data_ext
             if Bp != B:
                 toks = np.concatenate(
                     [toks, np.zeros((Bp - B,) + toks.shape[1:], toks.dtype)])
                 lam = np.concatenate(
                     [lam, np.zeros((Bp - B, lam.shape[1]), lam.dtype)])
-            pred, choice = self._decide(self.router_params,
-                                        jnp.asarray(toks), jnp.asarray(lam))
+            if data_par:
+                # data-parallel decision: batch rows sharded over the
+                # mesh's "data" axis, params replicated, the same fused
+                # kernel per device block (shard_map — see __init__)
+                bs = batch_sharding(self.mesh, 2, toks.shape)
+                pred, choice = self._decide_mesh(
+                    self._mesh_router_params(),
+                    jax.device_put(toks, bs),
+                    jax.device_put(lam, batch_sharding(self.mesh, 2,
+                                                       lam.shape)))
+            else:
+                pred, choice = self._decide(self.router_params,
+                                            jnp.asarray(toks),
+                                            jnp.asarray(lam))
             if sanitize.sanitize_enabled():
                 self._sanitize_batch(toks, pred, choice)
             pred = np.asarray(pred)[:B]
             choice = np.asarray(choice)[:B]
         else:
-            pred_dev = self._score(self.router_params, jnp.asarray(toks))
-            if sanitize.sanitize_enabled():
-                self._sanitize_batch(toks, pred_dev)
-            pred = np.asarray(pred_dev)
+            if data_par:
+                Bp = B
+                if Bp % self._data_ext:
+                    Bp += self._data_ext - Bp % self._data_ext
+                    toks = np.concatenate(
+                        [toks,
+                         np.zeros((Bp - B,) + toks.shape[1:], toks.dtype)])
+                # GSPMD data-parallel scoring: inputs NamedSharding'd by
+                # batch (sharding/rules.py "batch" -> "data"), traced
+                # under the activation-sharding context so the encoder
+                # keeps the batch axis sharded end to end
+                tsh = jax.device_put(toks,
+                                     batch_sharding(self.mesh, 2,
+                                                    toks.shape))
+                with activation_sharding(self.mesh, DEFAULT_RULES):
+                    pred_dev = self._score_mesh(self._mesh_router_params(),
+                                                tsh)
+                if sanitize.sanitize_enabled():
+                    self._sanitize_batch(toks, pred_dev)
+                pred = np.asarray(pred_dev)[:B]
+            else:
+                pred_dev = self._score(self.router_params,
+                                       jnp.asarray(toks))
+                if sanitize.sanitize_enabled():
+                    self._sanitize_batch(toks, pred_dev)
+                pred = np.asarray(pred_dev)
             # score = L-hat + sum_j lambda_j C_j, argmin on the host
             scores = pred.copy()
             for c in self.constraints:
@@ -645,7 +829,16 @@ class TryageEngine:
 
     def _run_expert(self, e, reqs: list[Request]):
         """Execute one padded per-expert micro-batch; returns per-example
-        (preds, loss, acc) arrays trimmed back to len(reqs)."""
+        (preds, loss, acc) arrays trimmed back to len(reqs).
+
+        With a placement map (mesh serving), the micro-batch is
+        *dispatched*: the least-busy device stream among the expert's
+        replica slices runs the whole batch with parameters committed to
+        that device (first dispatch per (expert, device) pays the
+        transfer, after that the replica is resident).  Committed
+        execution keeps the per-flush program identical to the
+        single-device engine — the mesh changes *where* a flush runs,
+        never *what* it computes."""
         n = len(reqs)
         Bp = self._bucket(n)
         S = len(reqs[0].tokens)
@@ -658,6 +851,27 @@ class TryageEngine:
                 targets[j] = r.targets
             if r.mask is not None:
                 mask[j] = r.mask
+        if self.placement is not None:
+            ei = self._expert_idx[e.name]
+            slot = self.streams.least_busy(self._expert_streams[ei])
+            dev = self._devices[slot]
+            key = (ei, slot)
+            ep = self._expert_params_on.get(key)
+            if ep is None:
+                ep = jax.device_put(e.params, dev)
+                self._expert_params_on[key] = ep
+            t0 = self._now()
+            preds, ex_loss, ex_acc = self._expert_fns[e.name](
+                ep, jax.device_put(toks, dev),
+                jax.device_put(targets, dev), jax.device_put(mask, dev))
+            out = (np.asarray(preds)[:n], np.asarray(ex_loss)[:n],
+                   np.asarray(ex_acc)[:n])
+            # attribute the flush's (blocked) wall time to its stream —
+            # the overlapped-makespan signal bench_mesh scales on
+            self.streams.record(slot, self._now() - t0, tokens=n * S)
+            self.stats.bucket_hits[Bp] += 1
+            self.stats.padded_rows += Bp - n
+            return out
         preds, ex_loss, ex_acc = self._expert_fns[e.name](
             e.params, jnp.asarray(toks), jnp.asarray(targets),
             jnp.asarray(mask))
@@ -686,6 +900,14 @@ class TryageEngine:
         ``flush_reason="failed"``) so the client sees the rejection
         instead of a hang."""
         if sched.take_failure(expert_idx):
+            if self.streams is not None:
+                # a failed flush occupies no stream time, but the
+                # per-device telemetry should still show where it was
+                # headed: charge the failure to the home slice's
+                # least-busy stream (the dispatch _run_expert would
+                # have made)
+                self.streams.record_failure(self.streams.least_busy(
+                    self._expert_streams[expert_idx]))
             return self._failed_flush(sched, expert_idx, entries)
         t0 = self._now()
         out = self._execute(expert_idx, entries, reason)
@@ -796,6 +1018,10 @@ class TryageEngine:
         """
         sched = ExpertScheduler(len(self.library), self.lane_target,
                                 self.max_wait_s)
+        if self.placement is not None:
+            # each expert lane carries its home device slice so flushes
+            # stream into the placement's per-device execution slots
+            sched.assign_slots(self.placement)
         self.scheduler = sched
         admitted: list[Request] = []
 

@@ -105,8 +105,9 @@ METRICS: tuple[MetricSpec, ...] = (
                "EngineStats.expert_failures"),
     # -------------------------------------------- scheduler & compute
     MetricSpec("tryage_flushes_total", "counter", ("reason",),
-               "Micro-batch launches, by flush reason "
-               "(target/deadline/drain/fifo).",
+               "Micro-batch launches, by flush reason (target = full "
+               "bucket, incl. at shutdown; deadline; drain = ragged "
+               "shutdown tail only; fifo).",
                "EngineStats.flushes"),
     MetricSpec("tryage_padded_rows_total", "counter", (),
                "Wasted rows executed due to bucket padding.",

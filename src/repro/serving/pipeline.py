@@ -210,7 +210,14 @@ class FallbackStage:
 class ExecuteStage:
     """Launch one padded per-expert micro-batch and materialise Results
     with true enqueue->flush latency; all execution telemetry
-    (flushes, buckets, latencies, cascade histogram) lands here."""
+    (flushes, buckets, latencies, cascade histogram) lands here.
+
+    On a mesh-backed engine the launch is a *dispatch*:
+    ``engine._run_expert`` consults the placement map
+    (``serving.placement.PlacementMap``) and commits the micro-batch to
+    the least-busy device stream among the expert's replica slices —
+    the stage itself is device-agnostic, which is exactly why the
+    executor could be swapped under it without touching the flow."""
 
     def __init__(self, engine: "TryageEngine"):
         self.eng = engine

@@ -66,12 +66,24 @@ class LaneEntry:
 
 
 class Lane:
-    """Pending routed requests for one expert."""
+    """Pending routed requests for one expert.
 
-    def __init__(self, expert_idx: int):
+    The lane tracks its oldest arrival incrementally: ``push`` is an
+    O(1) min-update and ``take`` recomputes the min only over the
+    entries it leaves behind.  ``oldest_wait`` is therefore O(1) —
+    it runs for every lane on every scheduler tick, and the old
+    full-lane ``min()`` re-scan made each tick O(total pending).
+    Lane slots (``slot``) are the mesh hook: the engine's placement map
+    pins each expert lane to its home device slice so flushes land in
+    that slice's execution stream (None = single-device engine).
+    """
+
+    def __init__(self, expert_idx: int, slot: int | None = None):
         self.expert_idx = expert_idx
+        self.slot = slot
         self.entries: list[LaneEntry] = []
         self.peak = 0
+        self._oldest: float | None = None
 
     def __len__(self) -> int:
         return len(self.entries)
@@ -79,11 +91,14 @@ class Lane:
     def push(self, entry: LaneEntry) -> None:
         self.entries.append(entry)
         self.peak = max(self.peak, len(self.entries))
+        a = entry.req.arrival
+        if a is not None and (self._oldest is None or a < self._oldest):
+            self._oldest = a
 
     def oldest_wait(self, now: float) -> float:
-        if not self.entries:
+        if not self.entries or self._oldest is None:
             return 0.0
-        return now - min(e.req.arrival for e in self.entries)
+        return now - self._oldest
 
     def take(self, n: int | None = None) -> list[LaneEntry]:
         """Remove and return the ``n`` highest-(priority, FIFO) entries;
@@ -93,6 +108,13 @@ class Lane:
             out, self.entries = self.entries, []
         else:
             out, self.entries = self.entries[:n], self.entries[n:]
+        if not self.entries:
+            self._oldest = None
+        else:
+            arrivals = [
+                e.req.arrival for e in self.entries if e.req.arrival is not None
+            ]
+            self._oldest = min(arrivals) if arrivals else None
         return out
 
 
@@ -120,6 +142,17 @@ class ExpertScheduler:
         # per-lane failure injection (tests/benchmarks): outstanding
         # failure count per expert; -1 = fail every flush until cleared
         self._inject_fail: dict[int, int] = {}
+
+    def assign_slots(self, placement) -> None:
+        """Pin every expert's lanes (both tiers) to the home device
+        slice of a ``serving.placement.PlacementMap``.  Health signals
+        stay per *expert* — ``depths()``/``saturation()`` are unchanged
+        by slot assignment; the slot only tells the Execute stage which
+        device stream a flush of this lane prefers."""
+        for i, lane in self.lanes.items():
+            lane.slot = placement.home(i)
+        for i, lane in self.esc_lanes.items():
+            lane.slot = placement.home(i)
 
     # ------------------------------------------------------- routing in
 
@@ -161,10 +194,18 @@ class ExpertScheduler:
 
     def drain(self) -> Iterator[tuple[int, list[LaneEntry], str]]:
         """Flush everything still pending — shutdown must leave no
-        request behind, in either lane tier."""
+        request behind, in either lane tier.
+
+        Flush labels stay honest at shutdown: a lane holding ``target``
+        or more entries ships its full buckets as ``FLUSH_TARGET``
+        (they are full buckets — that they flush during drain is an
+        accident of timing, not a property of the batch), and only the
+        ragged tail is labelled ``FLUSH_DRAIN``.  ``EngineStats.flushes``
+        therefore counts exactly the partial micro-batches forced out by
+        shutdown, matching docs/METRICS.md."""
         for lane in self._all_lanes():
-            while len(lane) > self.target:
-                yield lane.expert_idx, lane.take(self.target), FLUSH_DRAIN
+            while len(lane) >= self.target:
+                yield lane.expert_idx, lane.take(self.target), FLUSH_TARGET
             if lane.entries:
                 yield lane.expert_idx, lane.take(None), FLUSH_DRAIN
 

@@ -16,10 +16,30 @@ import contextvars
 import jax
 from jax.sharding import NamedSharding
 
-from repro.sharding.rules import LogicalRules, logical_to_spec
+from repro.sharding.rules import DEFAULT_RULES, LogicalRules, logical_to_spec
 
 _CTX: contextvars.ContextVar = contextvars.ContextVar(
     "activation_sharding", default=None)
+
+
+def batch_sharding(mesh, ndim: int, dim_sizes=None,
+                   rules: LogicalRules = DEFAULT_RULES) -> NamedSharding:
+    """``NamedSharding`` that shards the leading (batch) dim over the
+    mesh's ``data`` axis and replicates the rest — the placement the
+    serving engine's data-parallel routing stage puts on admission
+    batches (tokens and per-request lambda rows).  Divisibility-aware
+    via ``logical_to_spec``: pass ``dim_sizes`` to fall back to
+    replication when the batch does not divide the data axis."""
+    spec = logical_to_spec(mesh, ("batch",) + (None,) * (ndim - 1),
+                           dim_sizes, rules)
+    return NamedSharding(mesh, spec)
+
+
+def replicated_sharding(mesh) -> NamedSharding:
+    """Fully-replicated ``NamedSharding`` (router params on the serving
+    mesh: every data shard scores with the same snapshot)."""
+    return NamedSharding(mesh, logical_to_spec(mesh, (), None,
+                                               DEFAULT_RULES))
 
 
 @contextlib.contextmanager

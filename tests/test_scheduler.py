@@ -397,3 +397,71 @@ def test_serve_emits_every_admitted_request_once(tiny_library, uids,
                 yield None
     results = list(eng.serve(stream()))
     assert sorted(r.uid for r in results) == list(range(len(uids)))
+
+
+# ------------------------------------- latent-bug regressions (PR 8)
+
+
+def test_cache_hit_pred_row_is_readonly():
+    """A cached pred row is shared by reference across hits; mutating a
+    hit must raise instead of silently corrupting every later hit."""
+    cache = DecisionCache(capacity=4)
+    k = DecisionCache.key(np.arange(8, dtype=np.int32), {}, ["size"])
+    cache.put(k, np.array([0.5, 1.5, 2.5], np.float32), choice=0)
+    pred, choice, _, _ = cache.get(k)
+    with pytest.raises(ValueError):
+        pred[choice] = -1.0                   # the old silent corruption
+    again, _, _, _ = cache.get(k)
+    np.testing.assert_array_equal(again, [0.5, 1.5, 2.5])
+
+
+def test_drain_labels_full_buckets_as_target():
+    """drain() emits FLUSH_TARGET for every full bucket and reserves
+    FLUSH_DRAIN for the ragged tail, so flush telemetry distinguishes
+    healthy batching from shutdown stragglers."""
+    sched = ExpertScheduler(n_experts=1, target=4, max_wait_s=100.0)
+    for i in range(9):
+        sched.push(0, _req(i, arrival=1.0), np.zeros(2))
+    # pop_ready would already take two full buckets; go straight to drain
+    flushes = list(sched.drain())
+    assert [(len(e), reason) for _, e, reason in flushes] == [
+        (4, FLUSH_TARGET), (4, FLUSH_TARGET), (1, FLUSH_DRAIN)]
+    assert sched.pending == 0
+
+
+def test_drain_exact_target_lane_is_all_target():
+    """A lane holding exactly one full bucket drains with no
+    FLUSH_DRAIN tail at all."""
+    sched = ExpertScheduler(n_experts=2, target=3, max_wait_s=100.0)
+    for i in range(3):
+        sched.push(1, _req(i, arrival=1.0), np.zeros(2))
+    flushes = list(sched.drain())
+    assert [(mi, len(e), r) for mi, e, r in flushes] == [(1, 3, FLUSH_TARGET)]
+
+
+@given(ops=st.lists(
+    st.one_of(st.tuples(st.just("push"),
+                        st.floats(0.0, 100.0, allow_nan=False)),
+              st.tuples(st.just("take"), st.integers(1, 4))),
+    min_size=1, max_size=40))
+@settings(max_examples=60, deadline=None)
+def test_oldest_wait_matches_naive_rescan(ops):
+    """The incremental oldest-arrival tracker must agree with a full
+    re-scan of the lane after every push/take (both compute the same
+    min over the same floats, so equality is exact)."""
+    from repro.serving.scheduler import Lane, LaneEntry
+
+    lane = Lane(0)
+    uid = 0
+    for op in ops:
+        if op[0] == "push":
+            lane.push(LaneEntry(req=_req(uid, arrival=op[1]),
+                                pred=np.zeros(2), seq=uid))
+            uid += 1
+        else:
+            lane.take(op[1])
+        now = 200.0
+        arrivals = [e.req.arrival for e in lane.entries
+                    if e.req.arrival is not None]
+        naive = (now - min(arrivals)) if arrivals else 0.0
+        assert lane.oldest_wait(now) == naive
