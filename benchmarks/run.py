@@ -965,6 +965,181 @@ def bench_mesh(res):
                 f"only {ratio:.2f}x size 1 (need >= 3x)")
 
 
+def bench_cache(res):
+    """Tiered decision cache (T1 exact LRU + T2 persistent KV + T3
+    semantic) on repeated/paraphrased traffic.
+
+    The workload is production-shaped: a stream of unique prompts, then
+    exact repeats (retries/polling — what T1/T2 answer), then
+    paraphrases made by flipping one token of an earlier prompt (what
+    only the semantic tier can answer; the exact tiers key on token
+    bytes and must miss them).  The semantic distance bound is
+    *calibrated*, not hand-picked: ``calibrate_eps`` over the fresh
+    verdicts of the unique prefix (half the smallest distance between
+    any two disagreeing prompts).
+
+    Gates (--strict fails the run):
+      * combined T1+T2+T3 hit-rate >= 2x the exact-only engine's on the
+        identical stream;
+      * zero wrong routings: every expert choice the tiered engine
+        serves (from any tier) equals a fresh-scoring oracle engine's
+        choice for the same request;
+      * mean decision time (router seconds per request) improves on the
+        exact-only engine;
+      * T2 restart round-trip: a new engine over the same ``DiskKVStore``
+        directory serves the stream again at >= 0.99 hit-rate (verdicts
+        survive the process).
+
+    Per-engine rows land in ``experiments/tryage/cache_hits.csv`` (CI
+    uploads it next to the benchmark CSV).
+    """
+    import shutil
+    import tempfile
+
+    import jax
+    from repro.core import experiment as ex
+    from repro.core.library import ExpertSpec, ModelLibrary, _enc
+    from repro.core.objective import recency_constraint, size_constraint
+    from repro.core.router import RouterConfig, init_router
+    from repro.models.model import count_params, init_model
+    from repro.serving import Request, TryageEngine, calibrate_eps
+    from repro.serving.engine import EngineStats
+
+    lib = ModelLibrary([
+        ExpertSpec("small", _enc("small", 1, 32, 2, 64, 64), {}, 0.5),
+        ExpertSpec("mid", _enc("mid", 1, 48, 2, 96, 64), {}, 0.5),
+        ExpertSpec("big", _enc("big", 2, 64, 2, 128, 64), {}, 0.9),
+    ])
+    for i, e in enumerate(lib.experts):
+        e.params, _ = init_model(jax.random.PRNGKey(i), e.cfg)
+        e.n_params = count_params(e.params)
+    rc = RouterConfig(n_models=3, vocab_size=64, num_layers=1, d_model=32,
+                      num_heads=2, d_ff=64)
+    rp, _ = init_router(jax.random.PRNGKey(9), rc)
+    cons = [size_constraint(lib), recency_constraint(lib)]
+
+    n_unique = 48 if _FAST["fast"] else 96
+    n_repeat, n_para = (32, 48) if _FAST["fast"] else (64, 96)
+    S = 32
+    rng = np.random.default_rng(0)
+    toks = rng.integers(4, 64, size=(n_unique, S)).astype(np.int32)
+    para = toks[np.arange(n_para) % n_unique].copy()
+    for i in range(n_para):                # paraphrase: flip one token
+        para[i, rng.integers(0, S)] = rng.integers(4, 64)
+    flag_mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
+    n = n_unique + n_repeat + n_para
+
+    def workload():
+        stream = [toks[i] for i in range(n_unique)]
+        stream += [toks[i % n_unique] for i in range(n_repeat)]
+        stream += [para[i] for i in range(n_para)]
+        return [Request(uid=i, tokens=t,
+                        lambdas=flag_mix[i % len(flag_mix)])
+                for i, t in enumerate(stream)]
+
+    def engine(**kw):
+        return TryageEngine(lib, rp, rc, cons, max_batch=32, **kw)
+
+    def run_measured(eng):
+        """Serve the stream with warm jits; return results by uid."""
+        warm = rng.integers(4, 64, size=(8, S)).astype(np.int32)
+        for i in range(8):                 # trace/compile outside timing
+            eng.submit(Request(uid=-1 - i, tokens=warm[i]))
+        eng.run()
+        eng.cache.clear()
+        eng.stats = EngineStats()
+        for r in workload():
+            eng.submit(r)
+        return {r.uid: r for r in eng.run()}
+
+    # fresh-scoring oracle: no cache at all, every verdict recomputed
+    oracle_eng = engine(decision_cache=False)
+    for r in workload():
+        oracle_eng.submit(r)
+    oracle = {r.uid: r for r in oracle_eng.run()}
+
+    # calibrate the semantic bound on the unique prefix's fresh verdicts,
+    # per lambda context (T3 indexes per context, so only same-context
+    # disagreements constrain the bound — pooling contexts would shrink
+    # eps with disagreements the tier can never cross)
+    uniq = workload()[:n_unique]
+    emb = oracle_eng._embed_batch(uniq)
+    choices = np.array([oracle[r.uid].expert for r in uniq])
+    ctx = np.array([i % len(flag_mix) for i in range(n_unique)])
+    eps = min(calibrate_eps(emb[ctx == c], choices[ctx == c], margin=0.5)
+              for c in range(len(flag_mix)))
+    if not np.isfinite(eps):               # all verdicts agree: bound by
+        d = ((emb[:, None] - emb[None]) ** 2).sum(-1)  # the sample itself
+        eps = 0.5 * float(np.sqrt(np.median(d[d > 0])))
+    yield ("cache/calibrated_eps", eps,
+           "0.5x closest same-context disagreeing pair")
+
+    csv_rows = []
+
+    def measure(tag, eng):
+        out = run_measured(eng)
+        st = eng.stats
+        total = st.cache_hits + st.cache_misses
+        hit_rate = st.cache_hits / max(1, total)
+        dec_ms = 1e3 * st.router_time_s / max(1, len(out))
+        wrong = sum(out[u].expert != oracle[u].expert for u in out)
+        tiers = dict(st.cache_tier_hits)
+        csv_rows.append((tag, hit_rate, tiers.get("t1", 0),
+                         tiers.get("t2", 0), tiers.get("t3", 0),
+                         st.cache_revalidation_rejects, dec_ms, wrong))
+        return hit_rate, dec_ms, wrong
+
+    exact_rate, exact_ms, exact_wrong = measure("exact", engine())
+
+    cache_dir = tempfile.mkdtemp(prefix="bench_cache_")
+    try:
+        tiered = engine(cache_dir=cache_dir, cache_semantic_eps=eps)
+        tier_rate, tier_ms, tier_wrong = measure("tiered", tiered)
+        tiered.cache.close()
+        restart = engine(cache_dir=cache_dir, cache_semantic_eps=eps)
+        re_rate, _, re_wrong = measure("restart", restart)
+        restart.cache.close()
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+
+    os.makedirs(ex.ART_DIR, exist_ok=True)
+    csv_path = os.path.normpath(os.path.join(ex.ART_DIR, "cache_hits.csv"))
+    with open(csv_path, "w") as f:
+        f.write("engine,hit_rate,t1_hits,t2_hits,t3_hits,"
+                "revalidation_rejects,decision_ms,wrong_verdicts\n")
+        for row in csv_rows:
+            f.write(",".join(f"{v:.6g}" if isinstance(v, float) else str(v)
+                             for v in row) + "\n")
+    yield ("cache/hits_csv", 1.0, csv_path)
+
+    yield ("cache/hit_rate_exact", exact_rate, f"{n} reqs, repeats only")
+    yield ("cache/hit_rate_tiered", tier_rate,
+           "same stream, T1+T2+T3, must be >= 2x exact")
+    yield ("cache/decision_ms_exact", exact_ms, "router s/request")
+    yield ("cache/decision_ms_tiered", tier_ms, "must improve on exact")
+    yield ("cache/wrong_verdicts", float(tier_wrong + re_wrong + exact_wrong),
+           "vs fresh-score oracle, must be 0")
+    yield ("cache/restart_hit_rate", re_rate,
+           "new process over the same DiskKVStore, must be >= 0.99")
+
+    if tier_wrong or re_wrong or exact_wrong:
+        raise RuntimeError(
+            f"cache: {tier_wrong + re_wrong + exact_wrong} served verdicts "
+            f"disagree with the fresh-score oracle (must be 0)")
+    if tier_rate < 2 * exact_rate:
+        raise RuntimeError(
+            f"cache: tiered hit-rate {tier_rate:.3f} < 2x exact-only "
+            f"{exact_rate:.3f}")
+    if tier_ms >= exact_ms:
+        raise RuntimeError(
+            f"cache: tiered decision time {tier_ms:.3f} ms/req did not "
+            f"improve on exact-only {exact_ms:.3f} ms/req")
+    if re_rate < 0.99:
+        raise RuntimeError(
+            f"cache: restart hit-rate {re_rate:.3f} < 0.99 — the "
+            f"DiskKVStore round-trip lost verdicts")
+
+
 # (name, fn, needs_experiment_artifacts)
 BENCHES = [
     ("fig2", bench_fig2, True),
@@ -983,6 +1158,7 @@ BENCHES = [
     ("drift", bench_drift, True),
     ("slo", bench_slo, False),
     ("mesh", bench_mesh, False),
+    ("cache", bench_cache, False),
 ]
 
 

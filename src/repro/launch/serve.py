@@ -10,6 +10,8 @@ drive the streaming API with a Poisson arrival simulator.
       [--sessions 4 --admission-cap 256] [--fallback-depth 2] \
       [--fail-expert small --fail-after 64] \
       [--mesh 2,4 --replicate-hot 1] \
+      [--cache-tiers exact,persistent,semantic --cache-dir cache/ \
+       --cache-semantic 0.5] \
       [--metrics-port 9109] [--metrics-out metrics.prom]
 
 By default requests flow through ``TryageEngine.serve`` — the
@@ -56,6 +58,14 @@ admitted — with fallback on, traffic re-routes around it; with
 --metrics-port P serves Prometheus text metrics at
 http://127.0.0.1:P/metrics for the duration of the run; --metrics-out
 FILE writes a final scrape to FILE.  See docs/OPERATIONS.md.
+
+Cache tiers: --cache-tiers picks which decision-cache tiers are live
+(comma list; ``exact`` is the in-process LRU and is always on,
+``persistent`` adds the restart-safe disk KV under --cache-dir,
+``semantic`` adds the embedding nearest-neighbour tier with distance
+bound --cache-semantic EPS).  ``--cache-tiers exact`` (the default) is
+bit-for-bit the pre-tier engine.  See docs/ARCHITECTURE.md "Decision
+cache tiers".
 
 Mesh serving: --mesh DATA,MODEL builds a (data, model) device mesh
 (``launch.mesh.make_host_mesh``) — the routing stage shards admission
@@ -130,6 +140,20 @@ def main():
                     help="comma fractions of requests at priority 0,1,2,...")
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the router-decision cache")
+    ap.add_argument("--cache-tiers", type=str, default="exact",
+                    help="comma list of decision-cache tiers: exact "
+                         "(in-process LRU, always on), persistent "
+                         "(restart-safe disk KV, needs --cache-dir), "
+                         "semantic (embedding NN tier, needs "
+                         "--cache-semantic)")
+    ap.add_argument("--cache-dir", type=str, default="",
+                    help="directory of the persistent cache tier's "
+                         "segment log (shared across engine replicas)")
+    ap.add_argument("--cache-semantic", type=float, default=0.0,
+                    metavar="EPS",
+                    help="distance bound of the semantic cache tier "
+                         "(0 = off; calibrate with benchmarks/run.py "
+                         "cache)")
     ap.add_argument("--cascade", type=float, default=0.0, metavar="T",
                     help="confidence threshold for cascade escalation "
                          "(0 = single-shot routing, the default)")
@@ -191,6 +215,18 @@ def main():
     args = ap.parse_args()
     if args.adapt_every > 0 and args.replay_cap <= 0:
         ap.error("--adapt-every needs a replay buffer (--replay-cap >= 1)")
+    tiers = {t.strip() for t in args.cache_tiers.split(",") if t.strip()}
+    unknown_tiers = tiers - {"exact", "persistent", "semantic"}
+    if unknown_tiers:
+        ap.error(f"--cache-tiers: unknown tier(s) {sorted(unknown_tiers)} "
+                 f"(choose from exact, persistent, semantic)")
+    if "persistent" in tiers and not args.cache_dir:
+        ap.error("--cache-tiers persistent needs --cache-dir")
+    if "semantic" in tiers and args.cache_semantic <= 0:
+        ap.error("--cache-tiers semantic needs --cache-semantic EPS > 0")
+    if args.no_cache and tiers - {"exact"}:
+        ap.error("--no-cache conflicts with --cache-tiers "
+                 "persistent/semantic")
 
     if args.sanitize:
         from repro.kernels import sanitize
@@ -240,6 +276,10 @@ def main():
                        lane_target=args.lane_target,
                        max_wait_s=args.max_wait_s,
                        decision_cache=not args.no_cache,
+                       cache_dir=(args.cache_dir
+                                  if "persistent" in tiers else None),
+                       cache_semantic_eps=(args.cache_semantic
+                                           if "semantic" in tiers else 0.0),
                        cascade_max_depth=args.cascade_depth,
                        adapt_every=args.adapt_every,
                        adapt_lr=args.adapt_lr,
@@ -342,6 +382,8 @@ def main():
         with open(args.metrics_out, "w") as f:
             f.write(render(eng.stats, eng.health, names))
         print(f"metrics written to {args.metrics_out}", flush=True)
+    if hasattr(eng.cache, "close"):       # persist the T2 segment log
+        eng.cache.close()
     accs = [r.accuracy for r in results if r.accuracy is not None]
     losses = [r.loss for r in results if r.loss is not None]
     print(json.dumps({
@@ -356,6 +398,7 @@ def main():
         "sessions": args.sessions,
         "fallback_depth": args.fallback_depth,
         "fail_expert": args.fail_expert or None,
+        "cache_tiers": sorted(tiers) if not args.no_cache else [],
         "mesh": eng.mesh_summary(),
         "wall_s": round(dt, 2),
         "req_per_s": round(len(results) / dt, 1),

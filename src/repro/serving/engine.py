@@ -96,14 +96,15 @@ from repro.core.objective import (Constraint, cascade_choice,
                                   confidence_scores, constraint_matrix,
                                   escalation_order, fallback_choice)
 from repro.core.router import (RouterConfig, VersionedParams,
-                               predict_losses, predict_uncertainty,
-                               router_embed)
+                               losses_from_emb, predict_losses,
+                               predict_uncertainty, router_embed)
 from repro.core.training import (make_router_update_step,
                                  router_prediction_error)
 from repro.kernels import sanitize
 from repro.kernels.router_score import ops as rs_ops
 from repro.models.model import forward
-from repro.serving.cache import DecisionCache
+from repro.serving.cache import DecisionCache, DecisionCacheStack
+from repro.serving.semcache import SemanticCache
 from repro.serving.feedback import ReplayBuffer
 from repro.serving.health import ExpertHealth
 from repro.serving.pipeline import ServingPipeline
@@ -144,9 +145,21 @@ class EngineStats:
     # percentiles are over the most recent 64k requests
     latencies: deque = dataclasses.field(
         default_factory=lambda: deque(maxlen=65536))
-    # router-decision cache telemetry.
+    # router-decision cache telemetry.  Tier attribution: "t1" is the
+    # in-process exact LRU, "t2" the persistent KV store, "t3" the
+    # semantic tier.  Revalidations count semantic candidates found
+    # within the distance bound (then version-checked); rejects are the
+    # candidates that failed the check (stale router version).
+    # cache_key_dropped_lambda counts request lambda flags whose names
+    # matched no engine constraint (dropped from the cache key, and
+    # from scoring, by design — the count makes the typo visible).
     cache_hits: int = 0
     cache_misses: int = 0
+    cache_tier_hits: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    cache_revalidations: int = 0
+    cache_revalidation_rejects: int = 0
+    cache_key_dropped_lambda: int = 0
     # cascade telemetry: escalated-request count, histogram of cascade
     # depth over all served requests (depth 0 = first pick), and true
     # enqueue->flush latency bucketed by cascade tier.
@@ -230,7 +243,14 @@ class EngineStats:
                             self.latency_percentiles().items()},
                 "cache": {"hits": self.cache_hits,
                           "misses": self.cache_misses,
-                          "hit_rate": round(self.cache_hit_rate, 4)},
+                          "hit_rate": round(self.cache_hit_rate, 4),
+                          "tiers": {k: int(v) for k, v in
+                                    sorted(self.cache_tier_hits.items())},
+                          "revalidations": self.cache_revalidations,
+                          "revalidation_rejects":
+                              self.cache_revalidation_rejects,
+                          "dropped_lambda":
+                              self.cache_key_dropped_lambda},
                 "cascade": {
                     "escalations": self.escalations,
                     "depth_hist": {int(k): v for k, v in
@@ -282,6 +302,16 @@ class TryageEngine:
     - ``decision_cache`` / ``cache_capacity``: exact LRU memoisation of
       routing decisions keyed on (token bytes, lambda vector,
       confidence threshold, router version).
+    - ``cache_kv`` / ``cache_dir``: persistent exact cache tier (T2)
+      behind the Valkey-shaped KV interface (``serving.kvstore``) —
+      inject a store, or point ``cache_dir`` at a directory for the
+      crash-safe disk default.  Restart-safe: same dir + same router
+      version = warm cache.
+    - ``cache_semantic_eps`` / ``cache_semantic_cap``: approximate
+      cache tier (T3) keyed on router embeddings; ``eps > 0`` enables
+      it (calibrate with ``serving.semcache.calibrate_eps`` or
+      ``bench_cache``).  Verdicts are revalidated against the live
+      router version before use.
     - ``cascade_max_depth``: bound on escalation steps per request; 0
       disables the cascade engine-wide regardless of request thresholds.
     - ``now_fn``: engine clock (injectable for deterministic tests).
@@ -305,6 +335,9 @@ class TryageEngine:
                  interpret: bool | None = None, buckets: bool = True,
                  lane_target: int | None = None, max_wait_s: float = 0.05,
                  decision_cache: bool = True, cache_capacity: int = 4096,
+                 cache_kv=None, cache_dir: str | None = None,
+                 cache_semantic_eps: float = 0.0,
+                 cache_semantic_cap: int = 65536,
                  cascade_max_depth: int = 2,
                  adapt_every: int = 0, adapt_lr: float = 1e-2,
                  adapt_ema: float = 0.0, adapt_batch: int = 32,
@@ -332,8 +365,25 @@ class TryageEngine:
         self.lane_target = (bucket_size(max_batch) if lane_target is None
                             else lane_target)
         self.max_wait_s = max_wait_s
-        self.cache = (DecisionCache(cache_capacity) if decision_cache
-                      else None)
+        # decision cache: exact-only traffic gets the plain LRU (the
+        # pre-stack engine, bit-for-bit); enabling the persistent or
+        # semantic tier builds the stack.  cache_kv injects a KVStore
+        # (e.g. a shared MemoryKVStore across replicas, or a real
+        # Valkey adapter); cache_dir builds the crash-safe DiskKVStore.
+        if decision_cache:
+            kv = cache_kv
+            if kv is None and cache_dir is not None:
+                from repro.serving.kvstore import DiskKVStore
+                kv = DiskKVStore(cache_dir)
+            sem = (SemanticCache(cache_semantic_eps, cache_semantic_cap)
+                   if cache_semantic_eps > 0.0 else None)
+            if kv is not None or sem is not None:
+                self.cache = DecisionCacheStack(cache_capacity, kv=kv,
+                                                semantic=sem)
+            else:
+                self.cache = DecisionCache(cache_capacity)
+        else:
+            self.cache = None
         self.cascade_max_depth = cascade_max_depth
         self._esc_order = escalation_order(library)
         # per-expert health/overload tracker (None = health-unaware
@@ -390,6 +440,15 @@ class TryageEngine:
         # the min_confidence=0 path runs the exact pre-cascade jits
         self._sigma = jax.jit(
             lambda p, toks: predict_uncertainty(p, rc, {"tokens": toks}))
+
+        # semantic-tier path: pooled embedding and head-from-embedding
+        # jits, compiled only if the semantic cache tier is enabled (the
+        # T3 probe needs the embedding before it knows whether a fresh
+        # score is needed, so the score is split at the embedding)
+        self._embed = jax.jit(
+            lambda p, toks: router_embed(p, rc, {"tokens": toks}))
+        self._head_from_emb = jax.jit(
+            lambda p, emb: losses_from_emb(p["head"], emb))
 
         if use_kernel:
             cmat = self._cmat
@@ -695,6 +754,47 @@ class TryageEngine:
             sanitize.run_checks(lambda p: _checks(p, None), pred)
         else:
             sanitize.run_checks(_checks, pred, choice)
+
+    def _embed_batch(self, reqs: list[Request]) -> np.ndarray:
+        """Pooled router embeddings (B, d) for the semantic cache tier —
+        one encoder pass over the batch, bucket-padded like
+        ``_score_batch``.  Counts as a router forward in the stats (it
+        is most of one)."""
+        B = len(reqs)
+        toks = np.stack([r.tokens for r in reqs])
+        t0 = self._now()
+        Bp = self._bucket(B)
+        if Bp != B:
+            toks = np.concatenate(
+                [toks, np.zeros((Bp - B,) + toks.shape[1:], toks.dtype)])
+        emb = np.asarray(self._embed(self.router_params,
+                                     jnp.asarray(toks)))[:B]
+        self.stats.router_time_s += self._now() - t0
+        self.stats.router_batches += 1
+        return emb
+
+    def _score_from_emb(self, reqs: list[Request], emb: np.ndarray,
+                        ) -> tuple[np.ndarray, np.ndarray]:
+        """Finish scoring from precomputed pooled embeddings: loss head
+        + host-side constrained argmin (the reference-path math — the
+        semantic tier reuses the T3 probe's encoder pass instead of
+        re-running the fused decision kernel)."""
+        B = len(reqs)
+        t0 = self._now()
+        Bp = self._bucket(B)
+        embp = emb
+        if Bp != B:
+            embp = np.concatenate(
+                [emb, np.zeros((Bp - B, emb.shape[1]), emb.dtype)])
+        pred = np.asarray(self._head_from_emb(self.router_params,
+                                              jnp.asarray(embp)))[:B]
+        scores = pred.copy()
+        for c in self.constraints:
+            lam = np.array([r.lambdas.get(c.name, 0.0) for r in reqs])
+            scores = scores + lam[:, None] * c.values[None, :]
+        choice = scores.argmin(axis=1)
+        self.stats.router_time_s += self._now() - t0
+        return pred, choice
 
     def _sigma_batch(self, reqs: list[Request]) -> np.ndarray:
         """Per-expert predictive uncertainty sigma (B, M) for a batch —

@@ -79,6 +79,22 @@ METRICS: tuple[MetricSpec, ...] = (
     MetricSpec("tryage_cache_misses_total", "counter", (),
                "Admission rows freshly scored by the router.",
                "EngineStats.cache_misses"),
+    MetricSpec("tryage_cache_tier_hits_total", "counter", ("tier",),
+               "Decision-cache hits, by tier (t1 exact LRU, t2 "
+               "persistent KV, t3 semantic).",
+               "EngineStats.cache_tier_hits"),
+    MetricSpec("tryage_cache_revalidations_total", "counter", (),
+               "Semantic-tier candidates found within the distance "
+               "bound and revalidated against the live router version.",
+               "EngineStats.cache_revalidations"),
+    MetricSpec("tryage_cache_revalidation_rejects_total", "counter", (),
+               "Semantic-tier candidates rejected at revalidation "
+               "(stale router version).",
+               "EngineStats.cache_revalidation_rejects"),
+    MetricSpec("tryage_cache_key_dropped_lambda_total", "counter", (),
+               "Request lambda flags with names unknown to the "
+               "engine's constraints, dropped from the cache key.",
+               "EngineStats.cache_key_dropped_lambda"),
     MetricSpec("tryage_cascade_escalations_total", "counter", (),
                "Requests escalated at least one cascade step.",
                "EngineStats.escalations"),
@@ -251,6 +267,14 @@ def render(stats, health=None, expert_names: Sequence[str] | None = None
     _scalar(w, "tryage_requests_failed_total", stats.failed)
     _scalar(w, "tryage_cache_hits_total", stats.cache_hits)
     _scalar(w, "tryage_cache_misses_total", stats.cache_misses)
+    _labelled(w, "tryage_cache_tier_hits_total", "tier",
+              dict(stats.cache_tier_hits))
+    _scalar(w, "tryage_cache_revalidations_total",
+            stats.cache_revalidations)
+    _scalar(w, "tryage_cache_revalidation_rejects_total",
+            stats.cache_revalidation_rejects)
+    _scalar(w, "tryage_cache_key_dropped_lambda_total",
+            stats.cache_key_dropped_lambda)
     _scalar(w, "tryage_cascade_escalations_total", stats.escalations)
     _labelled(w, "tryage_cascade_depth_total", "depth",
               dict(stats.cascade_depth_hist))

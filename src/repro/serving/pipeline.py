@@ -70,6 +70,9 @@ class RouteContext:
     fallback_depth: np.ndarray | None = None  # (B,) i64 health fallbacks
     keys: list | None = None
     miss_idx: list[int] = dataclasses.field(default_factory=list)
+    # row -> pooled router embedding, filled only when the semantic tier
+    # is enabled (Cascade feeds these back into T3 at memoisation time)
+    emb: dict | None = None
 
 
 @dataclasses.dataclass
@@ -108,20 +111,33 @@ class RouteStage:
             ctx.choice[:] = choice
             ctx.miss_idx = list(range(B))
             return ctx
+        sink = self._dropped_lambda_sink
         ctx.keys = [DecisionCache.key(r.tokens, r.lambdas, eng._cnames,
-                                      r.min_confidence, eng.router_version)
+                                      r.min_confidence, eng.router_version,
+                                      unknown_sink=sink)
                     for r in ctx.reqs]
         misses = []
         for i, key in enumerate(ctx.keys):
-            hit = eng.cache.get(key)
+            hit, tier = eng.cache.lookup(key)
             if hit is None:
                 misses.append(i)
             else:
                 (ctx.pred[i], ctx.choice[i], ctx.depth[i],
                  ctx.confidence[i]) = hit
                 ctx.cached[i] = True
+                eng.stats.cache_tier_hits[tier] += 1
+        if misses and getattr(eng.cache, "semantic", None) is not None:
+            misses = self._semantic_probe(ctx, misses)
         if misses:
-            mpred, mchoice = eng._score_batch([ctx.reqs[i] for i in misses])
+            if ctx.emb is not None:
+                # embeddings already computed for the T3 probe: finish
+                # the score from them (head + host constraint argmin)
+                mpred, mchoice = eng._score_from_emb(
+                    [ctx.reqs[i] for i in misses],
+                    np.stack([ctx.emb[i] for i in misses]))
+            else:
+                mpred, mchoice = eng._score_batch(
+                    [ctx.reqs[i] for i in misses])
             for j, i in enumerate(misses):
                 ctx.pred[i] = mpred[j]
                 ctx.choice[i] = mchoice[j]
@@ -129,6 +145,42 @@ class RouteStage:
         eng.stats.cache_hits += B - len(misses)
         eng.stats.cache_misses += len(misses)
         return ctx
+
+    def _dropped_lambda_sink(self, names: list) -> None:
+        self.eng.stats.cache_key_dropped_lambda += len(names)
+
+    def _semantic_probe(self, ctx: RouteContext,
+                        misses: list[int]) -> list[int]:
+        """T3 pass over the exact-miss rows: one batched embedding pass,
+        then a nearest-neighbour probe per row.  A hit adopts the
+        cached post-cascade verdict (after revalidation against the
+        live router version — see ``semcache.SemanticCache``); the
+        remaining rows keep their embeddings in ``ctx.emb`` so scoring
+        and T3 insertion reuse the encoder pass."""
+        eng = self.eng
+        emb = eng._embed_batch([ctx.reqs[i] for i in misses])
+        ctx.emb = {i: emb[j] for j, i in enumerate(misses)}
+        still = []
+        for j, i in enumerate(misses):
+            entry, status = eng.cache.lookup_semantic(
+                emb[j], ctx.keys[i], eng.router_version)
+            if status != "miss":
+                eng.stats.cache_revalidations += 1
+            if status == "hit":
+                (ctx.pred[i], ctx.choice[i], ctx.depth[i],
+                 ctx.confidence[i]) = entry
+                ctx.cached[i] = True
+                eng.stats.cache_tier_hits["t3"] += 1
+                # promote into the exact tiers under this prompt's own
+                # key: the next identical retry is a T1 hit, no
+                # embedding pass needed
+                eng.cache.put(ctx.keys[i], entry[0], entry[1],
+                              int(entry[2]), float(entry[3]))
+                continue
+            if status == "stale":
+                eng.stats.cache_revalidation_rejects += 1
+            still.append(i)
+        return still
 
 
 class CascadeStage:
@@ -157,8 +209,15 @@ class CascadeStage:
             ctx.depth[i] = mdepth[j]
             ctx.confidence[i] = mconf[j]
             if ctx.keys is not None:
-                eng.cache.put(ctx.keys[i], mpred[j], mchoice[j],
-                              int(mdepth[j]), float(mconf[j]))
+                if ctx.emb is not None:
+                    # semantic tier enabled: hand the row's embedding to
+                    # the stack so T3 learns this verdict too
+                    eng.cache.put(ctx.keys[i], mpred[j], mchoice[j],
+                                  int(mdepth[j]), float(mconf[j]),
+                                  emb=ctx.emb[i])
+                else:
+                    eng.cache.put(ctx.keys[i], mpred[j], mchoice[j],
+                                  int(mdepth[j]), float(mconf[j]))
         return ctx
 
 

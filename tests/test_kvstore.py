@@ -1,0 +1,211 @@
+"""Crash-safety harness for the persistent decision-cache tier.
+
+The contract under test (docstring of ``repro.serving.kvstore``): a
+process killed at ANY byte offset of the segment log loses at most the
+record being written.  Recovery replays the intact prefix, quarantines
+the torn tail to a sidecar (never served, never fatal), and truncates
+the log back to the last good record boundary.
+
+Two sweeps enforce it exhaustively at small scale:
+
+* truncation sweep — write a known log, chop it at every byte offset,
+  reload, and assert the recovered store is exactly the consistent
+  prefix of the operation sequence (no torn record ever surfaces);
+* fault-injection sweep — ``fail_after_bytes`` cuts an append after
+  every possible byte count, which is the torn-tail shape a real
+  ``kill -9`` leaves behind, and recovery must behave identically.
+"""
+
+import os
+
+import pytest
+
+from repro.serving.kvstore import (DiskKVStore, MemoryKVStore,
+                                   SimulatedCrash, _frame)
+
+
+def _ops(n=6):
+    """A small op sequence with overwrites and a delete mixed in."""
+    ops = []
+    for i in range(n):
+        ops.append(("set", b"k%d" % (i % 4), b"v%d" % i))
+    ops.append(("del", b"k1", b""))
+    ops.append(("set", b"k9", b"x" * 37))
+    return ops
+
+
+def _apply(store, ops):
+    for op, k, v in ops:
+        if op == "set":
+            store.set(k, v)
+        else:
+            store.delete(k)
+
+
+def _oracle(ops):
+    d = {}
+    for op, k, v in ops:
+        if op == "set":
+            d[k] = v
+        else:
+            d.pop(k, None)
+    return d
+
+
+def _record_boundaries(ops):
+    """Byte offsets at which each framed record of ``ops`` ends."""
+    off, ends = 0, [0]
+    d = {}
+    for op, k, v in ops:
+        if op == "del" and k not in d:
+            continue                      # delete of a missing key: no record
+        d[k] = v if op == "set" else d.pop(k, None)
+        rec = _frame(0 if op == "set" else 1, k, v)
+        off += len(rec)
+        ends.append(off)
+    return ends
+
+
+def test_round_trip_and_restart(tmp_path):
+    s = DiskKVStore(str(tmp_path))
+    _apply(s, _ops())
+    want = _oracle(_ops())
+    assert {k: s.get(k) for k in s.keys()} == want
+    s.close()
+    s2 = DiskKVStore(str(tmp_path))
+    assert {k: s2.get(k) for k in s2.keys()} == want
+    assert s2.quarantined_bytes == 0
+    s2.close()
+
+
+def test_truncation_at_every_byte_recovers_consistent_prefix(tmp_path):
+    ops = _ops()
+    s = DiskKVStore(str(tmp_path / "w"))
+    _apply(s, ops)
+    s.close()
+    log = (tmp_path / "w" / "segments.log").read_bytes()
+    ends = _record_boundaries(ops)
+    assert ends[-1] == len(log)           # framing model matches the file
+    for cut in range(len(log) + 1):
+        d = tmp_path / ("cut%d" % cut)
+        d.mkdir()
+        (d / "segments.log").write_bytes(log[:cut])
+        r = DiskKVStore(str(d))
+        # recovered state == replay of the longest whole-record prefix
+        n_good = max(i for i, e in enumerate(ends) if e <= cut)
+        prefix_ends = ends[n_good]
+        want = {}
+        applied = 0
+        for op, k, v in ops:
+            if op == "del" and k not in want:
+                continue
+            if applied == n_good:
+                break
+            if op == "set":
+                want[k] = v
+            else:
+                want.pop(k, None)
+            applied += 1
+        assert {k: r.get(k) for k in r.keys()} == want, f"cut={cut}"
+        # torn tail quarantined, log truncated to the good boundary
+        assert r.quarantined_bytes == cut - prefix_ends
+        assert os.path.getsize(r.path) == prefix_ends
+        if cut > prefix_ends:
+            assert (d / f"quarantine-{prefix_ends}.bin").exists()
+        r.close()
+
+
+def test_corrupt_middle_byte_stops_replay_without_crashing(tmp_path):
+    ops = _ops()
+    s = DiskKVStore(str(tmp_path / "w"))
+    _apply(s, ops)
+    s.close()
+    log = bytearray((tmp_path / "w" / "segments.log").read_bytes())
+    log[len(log) // 2] ^= 0xFF            # flip one byte mid-log
+    d = tmp_path / "bad"
+    d.mkdir()
+    (d / "segments.log").write_bytes(bytes(log))
+    r = DiskKVStore(str(d))               # must not raise
+    assert r.quarantined_bytes > 0
+    # everything it does serve is a value some prefix of ops produced
+    seen = {}
+    legal = [dict(seen)]
+    for op, k, v in ops:
+        if op == "set":
+            seen[k] = v
+        else:
+            seen.pop(k, None)
+        legal.append(dict(seen))
+    assert {k: r.get(k) for k in r.keys()} in legal
+    r.close()
+
+
+def test_fault_injection_at_every_offset(tmp_path):
+    base = _ops()
+    tail_key, tail_value = b"crashkey", b"crashvalue" * 3
+    rec_len = len(_frame(0, tail_key, tail_value))
+    for cut in range(rec_len):
+        d = tmp_path / ("crash%d" % cut)
+        s = DiskKVStore(str(d))
+        _apply(s, base)
+        s.flush()
+        s.fail_after_bytes = cut
+        with pytest.raises(SimulatedCrash):
+            s.set(tail_key, tail_value)
+        s._fh.close()                     # the "process" is gone
+        r = DiskKVStore(str(d))
+        want = _oracle(base)              # torn record never surfaces
+        assert {k: r.get(k) for k in r.keys()} == want, f"cut={cut}"
+        assert r.get(tail_key) is None
+        assert r.quarantined_bytes == cut
+        r.close()
+    # a crash after the full record was written keeps the record
+    d = tmp_path / "crash_full"
+    s = DiskKVStore(str(d))
+    _apply(s, base)
+    s.fail_after_bytes = rec_len
+    with pytest.raises(SimulatedCrash):
+        s.set(tail_key, tail_value)
+    s._fh.close()
+    r = DiskKVStore(str(d))
+    assert r.get(tail_key) == tail_value
+    r.close()
+
+
+def test_compaction_round_trip(tmp_path):
+    s = DiskKVStore(str(tmp_path), compact_ratio=0.01)
+    for i in range(200):                  # heavy overwrite churn
+        s.set(b"hot", b"v%d" % i)
+        s.set(b"k%d" % (i % 8), b"w%d" % i)
+    live = {k: s.get(k) for k in s.keys()}
+    s.compact()
+    assert {k: s.get(k) for k in s.keys()} == live
+    size = os.path.getsize(s.path)        # compacted log is near-minimal
+    s.close()
+    r = DiskKVStore(str(tmp_path))
+    assert {k: r.get(k) for k in r.keys()} == live
+    assert os.path.getsize(r.path) == size
+    r.close()
+
+
+def test_auto_compaction_bounds_log_size(tmp_path):
+    s = DiskKVStore(str(tmp_path), compact_ratio=0.5)
+    for i in range(500):
+        s.set(b"only-key", os.urandom(64))
+    s.flush()
+    # one live record plus bounded slack, not 500 records of history
+    assert os.path.getsize(s.path) < 500 * 64 / 2
+    assert s.get(b"only-key") is not None
+    s.close()
+
+
+def test_memory_store_contract():
+    m = MemoryKVStore()
+    m.set(b"a", b"1")
+    m.set(b"a", b"2")
+    m.set(b"b", b"3")
+    m.delete(b"a")
+    m.delete(b"missing")
+    m.flush()
+    assert m.get(b"a") is None and m.get(b"b") == b"3"
+    assert m.keys() == [b"b"] and len(m) == 1

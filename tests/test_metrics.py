@@ -26,6 +26,10 @@ class FakeStats:
         self.failed = 1
         self.cache_hits = 3
         self.cache_misses = 4
+        self.cache_tier_hits = {"t1": 2, "t2": 1}
+        self.cache_revalidations = 1
+        self.cache_revalidation_rejects = 0
+        self.cache_key_dropped_lambda = 0
         self.escalations = 1
         self.cascade_depth_hist = {1: 1}
         self.fallbacks = 2

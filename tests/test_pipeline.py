@@ -111,6 +111,9 @@ def _pr3_route_admitted(eng, reqs):
         else:
             pred[i], choice[i], depth[i], conf[i] = hit
             cached[i] = True
+            # tier attribution is pure telemetry added with the cache
+            # stack; the exact LRU is tier "t1" in both flows
+            eng.stats.cache_tier_hits["t1"] += 1
     if misses:
         miss_reqs = [reqs[i] for i in misses]
         mpred, mchoice = eng._score_batch(miss_reqs)
