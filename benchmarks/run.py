@@ -1140,6 +1140,143 @@ def bench_cache(res):
             f"DiskKVStore round-trip lost verdicts")
 
 
+def bench_decision_latency(res):
+    """One-launch fused cascade vs the staged decide/sigma/escalate
+    path: p50/p99 decision latency at serving batch sizes with
+    escalation traffic (~half the workload carries its median-confidence
+    threshold, so depth-1 escalations actually fire).
+
+    Gates: expert choices and cascade depths must be bit-identical
+    between the two paths at every batch point, and the fused path's p50
+    must beat the staged path at the largest batch (>= 4k in full mode).
+    Also times the autotuned router tile against the static
+    ``block_b=128`` default — the tuned tile must win on at least one
+    batch point (regenerate the table with ``python -m
+    repro.launch.autotune``).  Per-point rows land in
+    experiments/tryage/decision_latency.csv.
+    """
+    import jax
+    from repro.core.library import ExpertSpec, ModelLibrary, _enc
+    from repro.core.router import RouterConfig, init_router
+    from repro.kernels.router_score import ops as rs_ops
+    from repro.models.model import count_params, init_model
+    from repro.serving import Request, TryageEngine
+
+    fast = _FAST["fast"]
+    batches = (256, 512) if fast else (1000, 4000, 16000)
+    repeats = 5 if fast else 7
+
+    lib = ModelLibrary([
+        ExpertSpec("small", _enc("small", 1, 32, 2, 64, 64), {}, 0.5),
+        ExpertSpec("mid", _enc("mid", 1, 48, 2, 96, 64), {}, 0.5),
+        ExpertSpec("big", _enc("big", 2, 64, 2, 128, 64), {}, 0.9),
+    ])
+    for i, e in enumerate(lib.experts):
+        e.params, _ = init_model(jax.random.PRNGKey(i), e.cfg)
+        e.n_params = count_params(e.params)
+    rc = RouterConfig(n_models=3, vocab_size=64, num_layers=1, d_model=32,
+                      num_heads=2, d_ff=64)
+    rp, _ = init_router(jax.random.PRNGKey(9), rc, uncertainty=True)
+
+    rng = np.random.default_rng(0)
+
+    def engine(fused):
+        return TryageEngine(lib, rp, rc, use_kernel=True,
+                            decision_cache=False, cascade_max_depth=2,
+                            fused_cascade=fused)
+
+    staged, fused = engine(False), engine(True)
+
+    # escalation threshold from the traffic's own confidence median
+    # (bench_cascade's quantile trick): odd rows carry it, even rows
+    # stay single-shot, so both code paths see mixed traffic
+    probe = [Request(uid=i, tokens=rng.integers(4, 64, size=32)
+                     .astype(np.int32)) for i in range(256)]
+    _, pchoice = staged._score_batch(probe)
+    pconf = 1.0 / (1.0 + staged._sigma_batch(probe))
+    thr = float(np.quantile(
+        [pconf[j, c] for j, c in enumerate(pchoice)], 0.5)) + 1e-6
+
+    def workload(B):
+        toks = rng.integers(4, 64, size=(B, 32)).astype(np.int32)
+        return [Request(uid=i, tokens=toks[i],
+                        min_confidence=thr if i % 2 else 0.0)
+                for i in range(B)]
+
+    def time_path(eng, reqs):
+        out = eng._route_admitted(reqs)        # warm the jit caches
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out = eng._route_admitted(reqs)
+            ts.append((time.perf_counter() - t0) * 1e3)
+        return out, (float(np.percentile(ts, 50)),
+                     float(np.percentile(ts, 99)))
+
+    csv = ["batch,path,p50_ms,p99_ms"]
+    speedup_at = {}
+    tile_speedups = {}
+    for B in batches:
+        reqs = workload(B)
+        (_, c_s, _, d_s, _, _), (s50, s99) = time_path(staged, reqs)
+        (_, c_f, _, d_f, _, _), (f50, f99) = time_path(fused, reqs)
+        match = float(np.array_equal(c_s, c_f)
+                      and np.array_equal(d_s, d_f))
+        esc_frac = float((np.asarray(d_s) > 0).mean())
+        csv.append(f"{B},staged,{s50:.4f},{s99:.4f}")
+        csv.append(f"{B},fused,{f50:.4f},{f99:.4f}")
+        yield (f"decision_latency/staged/b{B}/p50_ms", s50,
+               f"p99={s99:.4f};esc_frac={esc_frac:.3f}")
+        yield (f"decision_latency/fused/b{B}/p50_ms", f50,
+               f"p99={f99:.4f}")
+        yield (f"decision_latency/b{B}/choice_match", match,
+               "choices+depths, fused vs staged, must be 1")
+        speedup_at[B] = s50 / f50 if f50 > 0 else float("inf")
+        yield (f"decision_latency/b{B}/speedup_p50", speedup_at[B],
+               "staged_p50 / fused_p50")
+        if not match:
+            raise RuntimeError(
+                f"decision_latency: fused cascade choices/depths "
+                f"diverged from staged path at batch {B}")
+
+        # autotuned tile vs the static default, measured on the
+        # autotuner's own representative workload (the shape the table
+        # entry is a claim about); decision_plan reports the *effective*
+        # tile the table would apply at this batch
+        from repro.launch import autotune as at
+        tuned = rs_ops.decision_plan(B)["block_b"]
+        cands = at.KERNELS["router_score"][0](B,
+                                              np.random.default_rng(B))
+        by_eff = {c.record["effective_block_b"]: c for c in cands}
+        if tuned != 128 and tuned in by_eff and 128 in by_eff:
+            default_ms = at.measure_candidate(by_eff[128], repeats) * 1e3
+            tuned_ms = at.measure_candidate(by_eff[tuned], repeats) * 1e3
+            tile_speedups[B] = default_ms / tuned_ms
+            yield (f"decision_latency/b{B}/tuned_tile_speedup",
+                   tile_speedups[B],
+                   f"block_b {tuned} vs 128; default={default_ms:.4f}ms")
+        else:
+            yield (f"decision_latency/b{B}/tuned_tile_speedup", 1.0,
+                   f"effective tile {tuned}; no distinct candidate pair")
+
+    os.makedirs(os.path.join("experiments", "tryage"), exist_ok=True)
+    path = os.path.join("experiments", "tryage", "decision_latency.csv")
+    with open(path, "w") as f:
+        f.write("\n".join(csv) + "\n")
+
+    big = max(batches)
+    if speedup_at[big] <= 1.0:
+        raise RuntimeError(
+            f"decision_latency: fused cascade p50 did not beat the "
+            f"staged path at batch {big} "
+            f"(speedup {speedup_at[big]:.3f}x)")
+    if tile_speedups and max(tile_speedups.values()) <= 1.0:
+        raise RuntimeError(
+            "decision_latency: autotuned tile beat the static "
+            "block_b=128 default at no batch point — regenerate the "
+            "table with: python -m repro.launch.autotune")
+
+
 # (name, fn, needs_experiment_artifacts)
 BENCHES = [
     ("fig2", bench_fig2, True),
@@ -1152,6 +1289,7 @@ BENCHES = [
     ("router_eps", bench_router_eps, True),
     ("kernels", bench_kernels, False),
     ("router_decision", bench_router_decision, False),
+    ("decision_latency", bench_decision_latency, False),
     ("serving", bench_serving, True),
     ("scheduler", bench_scheduler, True),
     ("cascade", bench_cascade, True),

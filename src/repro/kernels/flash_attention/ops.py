@@ -4,22 +4,34 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels import sanitize
+from repro.kernels import sanitize, tiles
 from repro.kernels.flash_attention.kernel import flash_attention_bhsd
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
-                    block_q=128, block_k=128, interpret=None):
+                    block_q=None, block_k=None, interpret=None):
     """q: (B, S, H, hd); k/v: (B, T, KV, hd) with H % KV == 0.
 
     Returns (B, S, H, hd).  GQA is handled by repeating K/V heads before
     the kernel (the kernel itself is per-(batch*head)).
+
+    ``block_q``/``block_k`` default to the autotuned tile table (static
+    128 as fallback); explicit values are used as-is.
 
     Under ``REPRO_SANITIZE=1`` (eager calls only) the inputs, the window
     bound and the output are validated with checkify — see
     ``kernels.sanitize``.
     """
     B, S, H, hd = q.shape
+    T = k.shape[1]
+    # table-sourced tiles must satisfy the kernel's divisibility assert;
+    # an incompatible entry falls back to the static default
+    if block_q is None:
+        bq = tiles.tile_for("flash_attention", B, "block_q", 128)
+        block_q = bq if S % min(bq, S) == 0 else 128
+    if block_k is None:
+        bk = tiles.tile_for("flash_attention", B, "block_k", 128)
+        block_k = bk if T % min(bk, T) == 0 else 128
     KV = k.shape[2]
     if KV != H:
         rep = H // KV

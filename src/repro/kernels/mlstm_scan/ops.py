@@ -3,15 +3,16 @@
 from __future__ import annotations
 
 
-from repro.kernels import sanitize
+from repro.kernels import sanitize, tiles
 from repro.kernels.mlstm_scan.kernel import mlstm_chunkwise_bh
 
 
-def mlstm_chunkwise(q, k, v, i_pre, f_pre, state, *, chunk=64,
+def mlstm_chunkwise(q, k, v, i_pre, f_pre, state, *, chunk=None,
                     interpret=None):
     """q/k/v: (B, S, H, dh) f32; i/f: (B, S, H); state: {"C","n","m"}.
 
-    Returns (h (B, S, H, dh), new_state).
+    Returns (h (B, S, H, dh), new_state).  ``chunk=None`` consults the
+    autotuned tile table (static default 64 as fallback).
 
     Under ``REPRO_SANITIZE=1`` (eager calls only) inputs, the incoming
     stabilizer state ``m`` (the exp exponent — out of ±MLSTM_M_RANGE
@@ -19,6 +20,11 @@ def mlstm_chunkwise(q, k, v, i_pre, f_pre, state, *, chunk=64,
     validated with checkify — see ``kernels.sanitize``.
     """
     B, S, H, dh = q.shape
+    if chunk is None:
+        # table-sourced chunks must satisfy the kernel's divisibility
+        # assert; an incompatible entry falls back to the static default
+        c = tiles.tile_for("mlstm_scan", B, "chunk", 64)
+        chunk = c if S % min(c, S) == 0 else 64
     to_bh = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
     to_bh2 = lambda a: a.transpose(0, 2, 1).reshape(B * H, S)
     h, C1, n1, m1 = mlstm_chunkwise_bh(

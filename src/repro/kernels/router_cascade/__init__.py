@@ -1,0 +1,1 @@
+"""Fused one-launch cascade decision kernel (see kernel.py)."""

@@ -1,0 +1,60 @@
+"""Public wrapper for the one-launch cascade decision head."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import sanitize, tiles
+from repro.kernels.router_cascade.kernel import router_score_cascade_fused
+from repro.kernels.router_score.kernel import launch_plan
+
+
+def decision_plan(B: int, block_b: int | None = None) -> dict:
+    """The launch geometry a ``router_route_cascade`` call with this
+    batch would use — tile-table consult included — so callers (engine
+    stats, the autotuner) can report the *effective* tile, not the
+    requested one."""
+    if block_b is None:
+        block_b = tiles.tile_for("router_cascade", B, "block_b", 128)
+    return launch_plan(B, block_b)
+
+
+def router_route_cascade(emb, head_params, unc_params, constraints,
+                         lambdas, ladder_pos, *, block_b=None,
+                         interpret=None):
+    """Full fused cascade decision: one Pallas program per batch tile
+    computes loss head, uncertainty head, constrained argmin and the
+    router-preferred depth-1 escalation target.
+
+    constraints: (n_c, M); lambdas: (B, n_c); ladder_pos: (M,) int —
+    expert -> position in the size-sorted escalation ladder.
+    ``block_b=None`` consults the autotuned tile table (static default
+    128 as fallback).
+    Returns ``(pred (B, M) f32, sigma (B, M) f32, choice (B,) int32,
+    esc (B,) int32)``.
+    """
+    lam = jnp.asarray(lambdas, jnp.float32)
+    if block_b is None:
+        block_b = tiles.tile_for("router_cascade", emb.shape[0],
+                                 "block_b", 128)
+    pred, sigma, choice, esc = router_score_cascade_fused(
+        emb, head_params["w1"], head_params["b1"], head_params["w2"],
+        head_params["b2"], unc_params["w1"], unc_params["b1"],
+        unc_params["w2"], unc_params["b2"],
+        jnp.asarray(constraints, jnp.float32), lam,
+        jnp.asarray(ladder_pos, jnp.int32), block_b=block_b,
+        interpret=interpret)
+    if (sanitize.sanitize_enabled()
+            and sanitize.concrete(emb, pred, sigma, choice, esc)):
+        M = head_params["w2"].shape[1]
+
+        def _checks(p, s, c, e):
+            sanitize.check_finite("router_cascade", "predicted losses", p)
+            sanitize.check_finite("router_cascade", "sigma", s)
+            sanitize.check_in_range("router_cascade", "expert choice",
+                                    c, 0, M)
+            sanitize.check_in_range("router_cascade", "escalation target",
+                                    e, 0, M)
+
+        sanitize.run_checks(_checks, pred, sigma, choice, esc)
+    return pred, sigma, choice, esc

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused cascade decision head."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.router import UNC_FLOOR
+
+
+def router_score_cascade_ref(emb, w1, b1, w2, b2, uw1, ub1, uw2, ub2,
+                             cvals, lam, ladder_pos):
+    emb = emb.astype(jnp.float32)
+    h = jax.nn.gelu(emb @ w1 + b1)
+    pred = jax.nn.softplus(h @ w2 + b2)
+    hu = jax.nn.gelu(emb @ uw1 + ub1)
+    sigma = jax.nn.softplus(hu @ uw2 + ub2) + UNC_FLOOR
+    combined = pred + lam.astype(jnp.float32) @ cvals
+    choice = jnp.argmin(combined, axis=1).astype(jnp.int32)
+    pos = jnp.asarray(ladder_pos, jnp.int32)
+    pos_choice = pos[choice]                             # (B,)
+    above = pos[None, :] > pos_choice[:, None]           # (B, M)
+    masked = jnp.where(above, combined, jnp.inf)
+    minval = jnp.min(masked, axis=1, keepdims=True)
+    M = combined.shape[1]
+    cand_pos = jnp.where(masked == minval, pos[None, :], M)
+    best_pos = jnp.min(cand_pos, axis=1)
+    ids = jnp.arange(M, dtype=jnp.int32)[None, :]
+    esc = jnp.sum(jnp.where(pos[None, :] == best_pos[:, None], ids, 0),
+                  axis=1)
+    esc = jnp.where(above.any(axis=1), esc, choice).astype(jnp.int32)
+    return pred, sigma, choice, esc

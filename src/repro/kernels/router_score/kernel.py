@@ -38,6 +38,23 @@ def _router_kernel(emb_ref, w1_ref, b1_ref, w2_ref, b2_ref, cvals_ref,
     choice_ref[...] = jnp.argmin(combined, axis=1).astype(jnp.int32)
 
 
+def launch_plan(B: int, block_b: int) -> dict:
+    """Effective launch geometry for a batch-tiled routing kernel.
+
+    ``block_b`` is silently clamped to the batch (a tile larger than B
+    would be all padding), so the *requested* tile and the tile that
+    actually ran can differ.  This is the single source of truth both
+    kernels and the autotuner use: tile-table entries record
+    ``effective_block_b`` from here, so they cannot lie about what ran.
+
+    Returns ``{"block_b": effective tile, "padded_batch": B + pad,
+    "grid": padded_batch // effective tile}``.
+    """
+    eff = max(1, min(int(block_b), int(B)))
+    padded = B + (-B) % eff
+    return {"block_b": eff, "padded_batch": padded, "grid": padded // eff}
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def router_score_fused(emb, w1, b1, w2, b2, cvals, lam, *, block_b=128,
                        interpret=None):
@@ -50,8 +67,9 @@ def router_score_fused(emb, w1, b1, w2, b2, cvals, lam, *, block_b=128,
     B, d = emb.shape
     M = w2.shape[1]
     n_c = cvals.shape[0]
-    block_b = min(block_b, B)
-    pad = (-B) % block_b
+    plan = launch_plan(B, block_b)
+    block_b = plan["block_b"]
+    pad = plan["padded_batch"] - B
     if pad:
         emb = jnp.pad(emb, ((0, pad), (0, 0)))
         lam = jnp.pad(lam, ((0, pad), (0, 0)))
@@ -59,7 +77,7 @@ def router_score_fused(emb, w1, b1, w2, b2, cvals, lam, *, block_b=128,
     hidden = w1.shape[1]
     scores, choice = pl.pallas_call(
         _router_kernel,
-        grid=(Bp // block_b,),
+        grid=(plan["grid"],),
         in_specs=[
             pl.BlockSpec((block_b, d), lambda i: (i, 0)),
             pl.BlockSpec((d, hidden), lambda i: (0, 0)),

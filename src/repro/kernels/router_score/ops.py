@@ -4,8 +4,17 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels import sanitize
-from repro.kernels.router_score.kernel import router_score_fused
+from repro.kernels import sanitize, tiles
+from repro.kernels.router_score.kernel import launch_plan, router_score_fused
+
+
+def decision_plan(B: int, block_b: int | None = None) -> dict:
+    """The launch geometry a ``router_route`` call with this batch would
+    use — tile-table consult included — so callers (engine stats, the
+    autotuner) can report the *effective* tile, not the requested one."""
+    if block_b is None:
+        block_b = tiles.tile_for("router_score", B, "block_b", 128)
+    return launch_plan(B, block_b)
 
 
 def router_route_checks(pred, choice, emb, head_params, lambdas) -> None:
@@ -32,7 +41,7 @@ def router_head(emb, head_params, interpret=None):
     return pred
 
 
-def router_route(emb, head_params, constraints, lambdas, *, block_b=128,
+def router_route(emb, head_params, constraints, lambdas, *, block_b=None,
                  interpret=None):
     """Full fused decision: one Pallas program per batch tile computes
     MLP head -> softplus -> per-request lambda-weighted constraint add ->
@@ -40,8 +49,13 @@ def router_route(emb, head_params, constraints, lambdas, *, block_b=128,
 
     constraints: (n_c, M) np/jnp; lambdas: (B, n_c).
     Returns (pred_losses (B, M) f32, choice (B,) int32).
+    ``block_b=None`` consults the autotuned tile table (static default
+    128 as fallback); an explicit tile is used as-is.
     """
     lam = jnp.asarray(lambdas, jnp.float32)
+    if block_b is None:
+        block_b = tiles.tile_for("router_score", emb.shape[0],
+                                 "block_b", 128)
     pred, choice = router_score_fused(
         emb, head_params["w1"], head_params["b1"], head_params["w2"],
         head_params["b2"], jnp.asarray(constraints, jnp.float32),

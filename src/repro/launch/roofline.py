@@ -5,18 +5,70 @@
     collective = collective_bytes / (links * link_bw)
 
 All inputs are per-chip (cost_analysis and the parsed HLO are post-SPMD).
-Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Hardware constants come from a preset table (``PRESETS``) selected
+explicitly or by backend detection (``detect_preset``); the default stays
+TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI — so
+existing callers are unchanged.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-PEAK_FLOPS = 197e12          # bf16 / chip
-HBM_BW = 819e9               # bytes/s / chip
-ICI_BW = 50e9                # bytes/s / link (v5e: ~4 usable links/chip,
-ICI_LINKS = 1                # conservatively count 1 link serializing all
-                             # collective traffic (worst case)
+
+@dataclasses.dataclass(frozen=True)
+class HWPreset:
+    """Per-chip hardware ceilings for one accelerator target."""
+
+    name: str
+    peak_flops: float       # FLOP/s (dense matmul, bf16 or vendor peak)
+    hbm_bw: float           # bytes/s main-memory bandwidth
+    ici_bw: float           # bytes/s per interconnect link
+    ici_links: int = 1      # links counted as serializing collectives
+
+
+PRESETS = {
+    # TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~4 usable ICI links/chip
+    # but conservatively count 1 link serializing all collective traffic
+    "tpu-v5e": HWPreset("tpu-v5e", 197e12, 819e9, 50e9, 1),
+    # A100-class GPU: 312 TFLOP/s bf16, 2.04 TB/s HBM2e, 600 GB/s NVLink
+    "gpu": HWPreset("gpu", 312e12, 2.04e12, 600e9, 1),
+    # server-class CPU socket: ~1 TFLOP/s f32, ~100 GB/s DDR, ~10 GB/s
+    # inter-socket — only useful for relative tile ranking, not absolute
+    # time prediction
+    "cpu": HWPreset("cpu", 1e12, 100e9, 10e9, 1),
+}
+
+# module-level constants kept for back-compat (dryrun.py and older tests
+# read them); they mirror the default preset
+_DEFAULT = PRESETS["tpu-v5e"]
+PEAK_FLOPS = _DEFAULT.peak_flops
+HBM_BW = _DEFAULT.hbm_bw
+ICI_BW = _DEFAULT.ici_bw
+ICI_LINKS = _DEFAULT.ici_links
+
+
+def detect_preset() -> HWPreset:
+    """The preset matching the live JAX backend (``tpu`` -> tpu-v5e,
+    ``gpu``/``cuda``/``rocm`` -> gpu, anything else -> cpu).  Lazy
+    import: the module stays importable without a working backend."""
+    try:
+        import jax
+        backend = jax.default_backend()
+    except Exception:
+        return PRESETS["cpu"]
+    if backend == "tpu":
+        return PRESETS["tpu-v5e"]
+    if backend in ("gpu", "cuda", "rocm"):
+        return PRESETS["gpu"]
+    return PRESETS["cpu"]
+
+
+def resolve_preset(name: str | None) -> HWPreset:
+    """Preset by name; ``None`` or ``"auto"`` detects from the backend."""
+    if name is None or name == "auto":
+        return detect_preset()
+    return PRESETS[name]
 
 
 @dataclasses.dataclass
@@ -24,18 +76,19 @@ class Roofline:
     flops: float
     hbm_bytes: float
     collective_bytes: float
+    hw: HWPreset = _DEFAULT
 
     @property
     def t_compute(self):
-        return self.flops / PEAK_FLOPS
+        return self.flops / self.hw.peak_flops
 
     @property
     def t_memory(self):
-        return self.hbm_bytes / HBM_BW
+        return self.hbm_bytes / self.hw.hbm_bw
 
     @property
     def t_collective(self):
-        return self.collective_bytes / (ICI_BW * ICI_LINKS)
+        return self.collective_bytes / (self.hw.ici_bw * self.hw.ici_links)
 
     @property
     def dominant(self):
@@ -56,6 +109,7 @@ class Roofline:
             "t_memory_s": self.t_memory,
             "t_collective_s": self.t_collective,
             "dominant": self.dominant,
+            "hw": self.hw.name,
         }
 
 

@@ -4,7 +4,8 @@ drive the streaming API with a Poisson arrival simulator.
   PYTHONPATH=src python -m repro.launch.serve --requests 256 [--fast] \
       [--use-kernel] [--no-buckets] [--fifo] [--arrival-rate 200] \
       [--max-wait-s 0.05] [--priority-mix 0.9,0.08,0.02] \
-      [--cascade 0.6] [--cascade-depth 2] \
+      [--cascade 0.6] [--cascade-depth 2] [--fused-cascade] \
+      [--speculate] [--tile-table PATH] \
       [--adapt-every 16 --adapt-lr 0.05 --replay-cap 1024] \
       [--drift-after 128 --drift-domains github,dm_math] \
       [--sessions 4 --admission-cap 256] [--fallback-depth 2] \
@@ -35,6 +36,12 @@ the next-larger expert via the scheduler's escalation lanes, up to
 --cascade-depth steps.  If the loaded router checkpoint predates the
 uncertainty head, one is calibrated on the fly against the cached
 held-out Q-table (a few seconds, head-only training).
+--fused-cascade (with --use-kernel) resolves score, confidence and the
+depth-1 escalation in one Pallas launch; --speculate lanes every
+request on its router choice immediately and resolves the escalation
+verdict after the tick's flushes launch (speculation telemetry lands
+in the summary JSON and the Prometheus metrics).  --tile-table points
+the kernels at an autotuned tile table (see launch/autotune.py).
 
 Online adaptation + drift: --adapt-every N turns on feedback-driven
 router refresh (one incremental update per N observed losses, replayed
@@ -159,6 +166,22 @@ def main():
                          "(0 = single-shot routing, the default)")
     ap.add_argument("--cascade-depth", type=int, default=2,
                     help="max escalation steps per request")
+    ap.add_argument("--fused-cascade", action="store_true",
+                    help="with --use-kernel and --cascade, resolve "
+                         "score + confidence + depth-1 escalation in "
+                         "one fused Pallas launch (choices identical "
+                         "to the staged path)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="speculative escalation: lane every request "
+                         "on its router choice immediately and resolve "
+                         "the cascade verdict after the tick's flushes "
+                         "launch (needs --cascade; incompatible with "
+                         "--fallback-depth)")
+    ap.add_argument("--tile-table", type=str, default="", metavar="PATH",
+                    help="autotuned kernel tile table (default: "
+                         "experiments/tryage/tile_table.json or "
+                         "$REPRO_TILE_TABLE; regenerate with python -m "
+                         "repro.launch.autotune)")
     ap.add_argument("--adapt-every", type=int, default=0, metavar="N",
                     help="router update every N observed losses "
                          "(0 = frozen router, the default)")
@@ -228,6 +251,23 @@ def main():
         ap.error("--no-cache conflicts with --cache-tiers "
                  "persistent/semantic")
 
+    if args.fused_cascade and not args.use_kernel:
+        ap.error("--fused-cascade needs --use-kernel")
+    if args.fused_cascade and args.cascade <= 0:
+        ap.error("--fused-cascade needs --cascade T > 0")
+    if args.speculate and args.cascade <= 0:
+        ap.error("--speculate needs --cascade T > 0")
+    if args.speculate and (args.fallback_depth > 0 or args.fail_expert):
+        ap.error("--speculate is incompatible with the health tracker "
+                 "(--fallback-depth/--fail-expert): deferred verdicts "
+                 "cannot reorder around the health consult")
+    if args.speculate and args.fifo:
+        ap.error("--speculate needs the scheduler (drop --fifo)")
+
+    if args.tile_table:
+        from repro.kernels import tiles
+        tiles.set_table_path(args.tile_table)
+
     if args.sanitize:
         from repro.kernels import sanitize
         sanitize.set_sanitize(True)
@@ -281,6 +321,8 @@ def main():
                        cache_semantic_eps=(args.cache_semantic
                                            if "semantic" in tiers else 0.0),
                        cascade_max_depth=args.cascade_depth,
+                       fused_cascade=args.fused_cascade,
+                       speculate=args.speculate,
                        adapt_every=args.adapt_every,
                        adapt_lr=args.adapt_lr,
                        replay_cap=args.replay_cap,
@@ -391,6 +433,8 @@ def main():
         "router_path": "fused-kernel" if args.use_kernel else "host",
         "discipline": "fifo-drain" if args.fifo else "continuous-batching",
         "cascade_threshold": args.cascade,
+        "fused_cascade": args.fused_cascade,
+        "speculate": args.speculate,
         "adapt_every": args.adapt_every,
         "sanitize": args.sanitize,
         "drift_after": args.drift_after,

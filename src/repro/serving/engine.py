@@ -101,13 +101,14 @@ from repro.core.router import (RouterConfig, VersionedParams,
 from repro.core.training import (make_router_update_step,
                                  router_prediction_error)
 from repro.kernels import sanitize
+from repro.kernels.router_cascade import ops as rc_ops
 from repro.kernels.router_score import ops as rs_ops
 from repro.models.model import forward
 from repro.serving.cache import DecisionCache, DecisionCacheStack
 from repro.serving.semcache import SemanticCache
 from repro.serving.feedback import ReplayBuffer
 from repro.serving.health import ExpertHealth
-from repro.serving.pipeline import ServingPipeline
+from repro.serving.pipeline import RouteContext, ServingPipeline
 from repro.serving.placement import (PlacementMap, StreamClock,
                                      plan_placement)
 from repro.serving.requests import Request, Result, lambda_matrix
@@ -169,6 +170,22 @@ class EngineStats:
     tier_latencies: dict = dataclasses.field(
         default_factory=lambda: defaultdict(
             lambda: deque(maxlen=65536)))
+    # speculative-escalation telemetry (serve() with speculate=True):
+    # lane entries enqueued before their escalation verdict resolved,
+    # split into confirmed first picks (hits), entries pulled back out
+    # of their lane before flushing (cancelled), and entries whose
+    # speculative execution had to be discarded (wasted, with the token
+    # count of the discarded work).  Exactly-once invariant:
+    # launched == hits + cancelled + wasted once all verdicts resolve.
+    spec_launched: int = 0
+    spec_hits: int = 0
+    spec_cancelled: int = 0
+    spec_wasted: int = 0
+    spec_wasted_tokens: int = 0
+    # effective launch geometry of the fused decision kernel per padded
+    # admission-batch size (the tile that actually ran after the
+    # block_b = min(block_b, B) clamp — summary/debug only)
+    router_tiles: dict = dataclasses.field(default_factory=dict)
     # online-adaptation telemetry: router updates applied (and the
     # resulting router version), feedback samples published, replay
     # occupancy, wall time spent in update steps, and the mean
@@ -259,6 +276,14 @@ class EngineStats:
                         tier: {k: round(v, 6) for k, v in p.items()}
                         for tier, p in
                         self.tier_latency_percentiles().items()}},
+                "speculation": {
+                    "launched": self.spec_launched,
+                    "hits": self.spec_hits,
+                    "cancelled": self.spec_cancelled,
+                    "wasted": self.spec_wasted,
+                    "wasted_tokens": self.spec_wasted_tokens},
+                "router_tiles": {int(k): dict(v) for k, v in
+                                 sorted(self.router_tiles.items())},
                 "adaptation": {
                     "updates": self.adapt_updates,
                     "router_version": self.router_version,
@@ -314,6 +339,26 @@ class TryageEngine:
       router version before use.
     - ``cascade_max_depth``: bound on escalation steps per request; 0
       disables the cascade engine-wide regardless of request thresholds.
+    - ``fused_cascade``: resolve scoring, confidence and the depth-1
+      escalation verdict in ONE kernel launch
+      (``kernels.router_cascade``) for batches that carry cascade
+      traffic.  Needs ``use_kernel=True``, an uncertainty head on the
+      router params, and a single-data-shard engine; otherwise (and for
+      batches with no confidence floors) the staged path runs
+      unchanged, so the flag degrades to a no-op instead of an error.
+      Depth >= 2 escalations fall back to the staged host walk row by
+      row, so verdicts match the staged path by construction.
+    - ``speculate``: in ``serve()``, enqueue each cascade-eligible
+      request's *first pick* lane entry immediately and resolve the
+      escalation verdict on the next scheduler tick — lane occupancy
+      and deadline clocks see the request while its verdict is in
+      flight.  On escalate the entry is cancelled out of its lane (or
+      its already-executed speculative result is discarded and counted
+      as wasted) and re-laned to the escalation target.  Exactly-once:
+      every request still yields exactly one Result.  Ignored when a
+      health tracker is attached (fallback must see final choices) and
+      under ``run()``.  Off (the default) is byte-identical to the
+      non-speculative engine.
     - ``now_fn``: engine clock (injectable for deterministic tests).
 
     Online-adaptation knobs (used by the Feedback stage):
@@ -339,6 +384,7 @@ class TryageEngine:
                  cache_semantic_eps: float = 0.0,
                  cache_semantic_cap: int = 65536,
                  cascade_max_depth: int = 2,
+                 fused_cascade: bool = False, speculate: bool = False,
                  adapt_every: int = 0, adapt_lr: float = 1e-2,
                  adapt_ema: float = 0.0, adapt_batch: int = 32,
                  adapt_trainable: str = "head", replay_cap: int = 4096,
@@ -385,7 +431,14 @@ class TryageEngine:
         else:
             self.cache = None
         self.cascade_max_depth = cascade_max_depth
+        self.fused_cascade = fused_cascade
+        self.speculate = speculate
         self._esc_order = escalation_order(library)
+        # expert index -> position in the escalation ladder (the inverse
+        # permutation the fused cascade kernel consumes)
+        self._ladder_pos = np.zeros(len(library), np.int64)
+        for pos, e in enumerate(self._esc_order):
+            self._ladder_pos[e] = pos
         # per-expert health/overload tracker (None = health-unaware
         # engine, the fallback stage is a strict no-op) and the bound on
         # route-time fallback re-selections per request
@@ -459,6 +512,16 @@ class TryageEngine:
                                            interpret=interpret)
 
             self._decide = jax.jit(_decide)
+            if fused_cascade:
+                ladder = jnp.asarray(self._ladder_pos, jnp.int32)
+
+                def _decide_cascade(p, toks, lam):
+                    emb = router_embed(p, rc, {"tokens": toks})
+                    return rc_ops.router_route_cascade(
+                        emb, p["head"], p["unc"], cmat, lam, ladder,
+                        interpret=interpret)
+
+                self._decide_cascade = jax.jit(_decide_cascade)
         else:
             self._score = jax.jit(
                 lambda p, toks: predict_losses(p, rc, {"tokens": toks},
@@ -692,6 +755,11 @@ class TryageEngine:
                 pred, choice = self._decide(self.router_params,
                                             jnp.asarray(toks),
                                             jnp.asarray(lam))
+            if Bp not in self.stats.router_tiles:
+                # effective tile actually launched for this padded batch
+                # (block_b silently clamps to the batch — see
+                # kernels.router_score.kernel.launch_plan)
+                self.stats.router_tiles[Bp] = rs_ops.decision_plan(Bp)
             if sanitize.sanitize_enabled():
                 self._sanitize_batch(toks, pred, choice)
             pred = np.asarray(pred)[:B]
@@ -732,6 +800,50 @@ class TryageEngine:
         self.stats.router_time_s += self._now() - t0
         self.stats.router_batches += 1
         return pred, choice
+
+    def _use_fused_cascade(self, reqs: list[Request]) -> bool:
+        """Whether this batch takes the one-launch cascade decision:
+        the flag is on, the kernel path is active, the router carries an
+        uncertainty head, the cascade is enabled, the engine is not
+        data-sharded (shard_map wiring covers the plain kernel only),
+        and the batch actually contains cascade traffic.  Batches that
+        fail any gate run the staged path bit-for-bit."""
+        return (self.fused_cascade and self.use_kernel
+                and self.cascade_max_depth > 0
+                and self._data_ext == 1
+                and "unc" in self.router_params
+                and any(r.min_confidence > 0.0 for r in reqs))
+
+    def _score_cascade_batch(self, reqs: list[Request]) -> tuple[
+            np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """One-launch cascade scoring: predicted losses, per-expert
+        sigma, constrained first pick and the router-preferred depth-1
+        escalation target, all from a single fused kernel launch
+        (``kernels.router_cascade``).  Mirrors ``_score_batch``'s
+        bucket padding and telemetry."""
+        B = len(reqs)
+        toks = np.stack([r.tokens for r in reqs])
+        lam = lambda_matrix(reqs, self._cnames)
+        t0 = self._now()
+        Bp = self._bucket(B)
+        if Bp != B:
+            toks = np.concatenate(
+                [toks, np.zeros((Bp - B,) + toks.shape[1:], toks.dtype)])
+            lam = np.concatenate(
+                [lam, np.zeros((Bp - B, lam.shape[1]), lam.dtype)])
+        pred, sigma, choice, esc = self._decide_cascade(
+            self.router_params, jnp.asarray(toks), jnp.asarray(lam))
+        if Bp not in self.stats.router_tiles:
+            self.stats.router_tiles[Bp] = rc_ops.decision_plan(Bp)
+        if sanitize.sanitize_enabled():
+            self._sanitize_batch(toks, pred, choice)
+        pred = np.asarray(pred)[:B]
+        sigma = np.asarray(sigma)[:B]
+        choice = np.asarray(choice)[:B]
+        esc = np.asarray(esc)[:B]
+        self.stats.router_time_s += self._now() - t0
+        self.stats.router_batches += 1
+        return pred, choice, sigma, esc
 
     def _sanitize_batch(self, toks, pred, choice=None):
         """``REPRO_SANITIZE``: validate one scored batch.  Token ids are
@@ -845,6 +957,52 @@ class TryageEngine:
                 int(choice[i]), confm[i], r.min_confidence,
                 self._esc_order, self.cascade_max_depth, scores[i])
             conf[i] = confm[i, final[i]]
+        return final, depth, conf
+
+    def _cascade_fused(self, reqs: list[Request], pred: np.ndarray,
+                       choice: np.ndarray, sigma: np.ndarray,
+                       esc: np.ndarray) -> tuple[np.ndarray, np.ndarray,
+                                                 np.ndarray]:
+        """Epilogue of the one-launch cascade decision: resolve each
+        request's per-request threshold against the kernel's confidence
+        and depth-1 escalation target.
+
+        Same contract as ``_cascade`` — ``(final, depth, confidence)``
+        with confidence computed in float64 from sigma exactly as the
+        staged path does.  The depth-1 common case needs no further
+        scoring work; the rare request that is *still* under-confident
+        after one step (and has ladder left, and ``cascade_max_depth >
+        1``) re-runs the staged ``cascade_choice`` walk from scratch,
+        so deep escalations match the staged path by construction."""
+        B = len(reqs)
+        depth = np.zeros(B, np.int64)
+        conf = np.ones(B, np.float64)
+        final = np.array(choice, np.int64, copy=True)
+        confm = confidence_scores(sigma)
+        top = len(self._esc_order) - 1
+        scores = None
+        for i, r in enumerate(reqs):
+            thr = r.min_confidence
+            if thr <= 0.0:
+                continue
+            c0 = int(choice[i])
+            if confm[i, c0] >= thr or self._ladder_pos[c0] >= top:
+                conf[i] = confm[i, c0]
+                continue
+            e1 = int(esc[i])
+            if (confm[i, e1] < thr and self._ladder_pos[e1] < top
+                    and self.cascade_max_depth > 1):
+                # depth >= 2: staged walk from scratch (exact fallback)
+                if scores is None:
+                    scores = (pred
+                              + lambda_matrix(reqs, self._cnames)
+                              @ self._cmat)
+                final[i], depth[i] = cascade_choice(
+                    c0, confm[i], thr, self._esc_order,
+                    self.cascade_max_depth, scores[i])
+                conf[i] = confm[i, final[i]]
+            else:
+                final[i], depth[i], conf[i] = e1, 1, confm[i, e1]
         return final, depth, conf
 
     def _route_admitted(self, reqs: list[Request]) -> tuple[
@@ -1016,6 +1174,40 @@ class TryageEngine:
                                       ok=True)
         return out
 
+    def _unrecord_result(self, res: Result) -> None:
+        """Reverse the per-request ``EngineStats`` accounting of one
+        Result whose speculative execution was discarded (the cascade
+        verdict escalated after the provisional entry already flushed).
+
+        Only the per-request counters are reverted — flush counts,
+        bucket hits, padded rows and expert wall time stay, because the
+        compute really happened; ``spec_wasted_tokens`` is the honest
+        record of that waste.  Replay feedback from the wasted
+        execution also stays: the (prompt, expert, loss) observation is
+        real even though the Result is withdrawn."""
+        st = self.stats
+        if res.failed:
+            st.failed -= 1
+            return
+        st.served -= 1
+        st.per_expert[res.expert] -= 1
+        if st.per_expert[res.expert] == 0:
+            del st.per_expert[res.expert]
+        st.total_flops -= res.flops_proxy
+        try:
+            st.latencies.remove(res.latency_s)
+        except ValueError:
+            pass
+        st.cascade_depth_hist[res.cascade_depth] -= 1
+        if st.cascade_depth_hist[res.cascade_depth] == 0:
+            del st.cascade_depth_hist[res.cascade_depth]
+        try:
+            st.tier_latencies[res.cascade_depth].remove(res.latency_s)
+        except (KeyError, ValueError):
+            pass
+        if res.cascade_depth > 0:
+            st.escalations -= 1
+
     def _failed_flush(self, sched: ExpertScheduler, expert_idx: int,
                       entries: list[LaneEntry]) -> list[Result]:
         """One lane flush failed: record it, then re-route or fail each
@@ -1115,6 +1307,17 @@ class TryageEngine:
         keep coalescing into batched router passes instead of
         degenerating to batch-of-1 scoring, while the lane deadline
         (measured from ``Request.arrival``) still bounds total wait.
+
+        With ``speculate=True`` (and a cascade enabled, no health
+        tracker) admission is split: every request is laned on its
+        *router* choice immediately and the cascade verdict is deferred
+        until after the tick's flushes launch.  A verdict that confirms
+        the pick promotes the provisional entry in place; one that
+        escalates cancels it (or, if it already flushed, discards the
+        speculative Result and reverts its accounting) and re-lanes the
+        request on the escalation target.  Exactly one Result per
+        request either way; ``EngineStats`` counts hits, cancels and
+        wasted work.
         """
         sched = ExpertScheduler(len(self.library), self.lane_target,
                                 self.max_wait_s)
@@ -1124,20 +1327,105 @@ class TryageEngine:
             sched.assign_slots(self.placement)
         self.scheduler = sched
         admitted: list[Request] = []
+        # speculation is sound only when the Fallback stage is a strict
+        # no-op (no health tracker): deferring Cascade must not reorder
+        # it around a health consult
+        spec_on = (self.speculate and self.cascade_max_depth > 0
+                   and self.health is None)
+        # speculative-escalation state: admission contexts whose cascade
+        # verdict is still deferred, the uids whose lane entries are
+        # provisional, and Results from flushes that executed a
+        # provisional entry before its verdict landed
+        inflight: list[tuple[RouteContext, list[int]]] = []
+        pending: dict = {}    # uid -> speculatively chosen expert
+        held: dict = {}       # uid -> Result awaiting its verdict
+
+        def _push_ctx(ctx, specs=frozenset()):
+            for i, r in enumerate(ctx.reqs):
+                sched.push(int(ctx.choice[i]), r, ctx.pred[i],
+                           bool(ctx.cached[i]), int(ctx.depth[i]),
+                           float(ctx.confidence[i]),
+                           int(ctx.fallback_depth[i]), spec=i in specs)
 
         def _admit():
-            (pred, choice, cached, depth, conf,
-             fdepth) = self._route_admitted(admitted)
-            for i, r in enumerate(admitted):
-                sched.push(int(choice[i]), r, pred[i], bool(cached[i]),
-                           int(depth[i]), float(conf[i]), int(fdepth[i]))
+            reqs = list(admitted)
             admitted.clear()
+            if spec_on:
+                # lane everything on the router's first pick now; the
+                # sigma/escalation verdict lands via _resolve() after
+                # this tick's flushes have launched
+                ctx = self.pipeline.route(RouteContext(reqs))
+                spec_rows = [i for i in ctx.miss_idx
+                             if reqs[i].min_confidence > 0.0]
+                if spec_rows:
+                    for i in spec_rows:
+                        pending[reqs[i].uid] = int(ctx.choice[i])
+                        self.stats.spec_launched += 1
+                    _push_ctx(ctx, frozenset(spec_rows))
+                    inflight.append((ctx, spec_rows))
+                else:
+                    # no escalation candidates in flight: finish the
+                    # admission synchronously, identical to the
+                    # non-speculative flow
+                    self.pipeline.fallback(self.pipeline.cascade(ctx))
+                    _push_ctx(ctx)
+            else:
+                (pred, choice, cached, depth, conf,
+                 fdepth) = self._route_admitted(reqs)
+                for i, r in enumerate(reqs):
+                    sched.push(int(choice[i]), r, pred[i],
+                               bool(cached[i]), int(depth[i]),
+                               float(conf[i]), int(fdepth[i]))
             if self.health is not None:
                 # saturation signal: every expert's pending depth folds
                 # into its health EWMA at each admission (zeros included
                 # so idle lanes decay)
                 for mi, d in enumerate(sched.depths()):
                     self.health.observe_lane_depth(mi, d)
+
+        def _resolve():
+            # land every deferred verdict: finish Cascade -> Fallback
+            # on the route-only contexts, then reconcile each
+            # provisional lane entry — exactly one Result per request
+            while inflight:
+                ctx, spec_rows = inflight.pop(0)
+                self.pipeline.fallback(self.pipeline.cascade(ctx))
+                for i in spec_rows:
+                    r = ctx.reqs[i]
+                    first = pending.pop(r.uid)
+                    final = int(ctx.choice[i])
+                    d = int(ctx.depth[i])
+                    cf = float(ctx.confidence[i])
+                    if d == 0:
+                        # hit: the provisional entry (or its already-
+                        # flushed Result) becomes authoritative
+                        self.stats.spec_hits += 1
+                        en = sched.find_entry(first, r.uid)
+                        if en is not None:
+                            en.spec = False
+                            en.confidence = cf
+                        else:
+                            res = held.pop(r.uid)
+                            res.confidence = cf
+                            yield res
+                        continue
+                    en = sched.remove_entry(first, r.uid)
+                    if en is not None:
+                        # still queued: cancel and re-lane on the
+                        # escalation target — no wasted compute
+                        self.stats.spec_cancelled += 1
+                        sched.push(final, r, en.pred, en.cached, d, cf,
+                                   en.fallback_depth)
+                    else:
+                        # the provisional copy already executed: count
+                        # the waste, revert its per-request accounting,
+                        # re-lane on the verdict's expert
+                        self.stats.spec_wasted += 1
+                        self.stats.spec_wasted_tokens += len(r.tokens)
+                        self._unrecord_result(held.pop(r.uid))
+                        sched.push(final, r, ctx.pred[i],
+                                   bool(ctx.cached[i]), d, cf,
+                                   int(ctx.fallback_depth[i]))
 
         if self.queue:
             queued, self.queue = self.queue, []
@@ -1157,15 +1445,27 @@ class TryageEngine:
                                  >= 0.5 * self.max_wait_s)):
                 _admit()
             for mi, entries, reason in sched.pop_ready(self._now()):
-                yield from self._flush_or_fail(sched, mi, entries, reason)
+                for res in self._flush_or_fail(sched, mi, entries,
+                                               reason):
+                    if res.uid in pending:
+                        held[res.uid] = res
+                    else:
+                        yield res
+            if inflight:
+                yield from _resolve()
         # input exhausted: shutdown drain leaves no request behind
         if admitted:
             _admit()
+        if inflight:
+            yield from _resolve()
         # a drain flush may re-route entries into other lanes (failure
         # injection during shutdown), so drain until quiescent
         while sched.pending:
             for mi, entries, reason in sched.drain():
-                yield from self._flush_or_fail(sched, mi, entries, reason)
+                yield from self._flush_or_fail(sched, mi, entries,
+                                               reason)
+        assert not inflight and not pending and not held, (
+            "speculation left unresolved verdicts or held Results")
         for mi, peak in sched.peaks().items():
             name = self.library[mi].name
             self.stats.lane_peaks[name] = max(

@@ -101,6 +101,26 @@ METRICS: tuple[MetricSpec, ...] = (
     MetricSpec("tryage_cascade_depth_total", "counter", ("depth",),
                "Served requests, by cascade escalation depth.",
                "EngineStats.cascade_depth_hist"),
+    # --------------------------------------- speculative escalation
+    MetricSpec("tryage_speculation_launched_total", "counter", (),
+               "Lane entries enqueued before their escalation verdict "
+               "resolved (serve() with speculate=True).",
+               "EngineStats.spec_launched"),
+    MetricSpec("tryage_speculation_hits_total", "counter", (),
+               "Speculative entries whose verdict confirmed the "
+               "router's first pick.",
+               "EngineStats.spec_hits"),
+    MetricSpec("tryage_speculation_cancelled_total", "counter", (),
+               "Speculative entries pulled back out of their lane "
+               "before flushing (verdict escalated; no wasted compute).",
+               "EngineStats.spec_cancelled"),
+    MetricSpec("tryage_speculation_wasted_total", "counter", (),
+               "Speculative executions discarded because the verdict "
+               "escalated after the entry already flushed.",
+               "EngineStats.spec_wasted"),
+    MetricSpec("tryage_speculation_wasted_tokens_total", "counter", (),
+               "Tokens executed by discarded speculative flushes.",
+               "EngineStats.spec_wasted_tokens"),
     # ------------------------------------------------ health fallback
     MetricSpec("tryage_fallbacks_total", "counter", (),
                "Route-time fallback re-selections (chosen expert "
@@ -278,6 +298,13 @@ def render(stats, health=None, expert_names: Sequence[str] | None = None
     _scalar(w, "tryage_cascade_escalations_total", stats.escalations)
     _labelled(w, "tryage_cascade_depth_total", "depth",
               dict(stats.cascade_depth_hist))
+    _scalar(w, "tryage_speculation_launched_total", stats.spec_launched)
+    _scalar(w, "tryage_speculation_hits_total", stats.spec_hits)
+    _scalar(w, "tryage_speculation_cancelled_total",
+            stats.spec_cancelled)
+    _scalar(w, "tryage_speculation_wasted_total", stats.spec_wasted)
+    _scalar(w, "tryage_speculation_wasted_tokens_total",
+            stats.spec_wasted_tokens)
     _scalar(w, "tryage_fallbacks_total", stats.fallbacks)
     _labelled(w, "tryage_fallbacks_by_depth_total", "depth",
               dict(stats.fallback_depth_hist))

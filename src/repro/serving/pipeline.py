@@ -73,6 +73,13 @@ class RouteContext:
     # row -> pooled router embedding, filled only when the semantic tier
     # is enabled (Cascade feeds these back into T3 at memoisation time)
     emb: dict | None = None
+    # one-launch cascade payload: (rows, sigma, esc) when the Route
+    # stage scored the misses through the fused cascade kernel — rows
+    # lists the scored ctx indices (== miss_idx), sigma/esc are the
+    # kernel's per-expert uncertainty and depth-1 escalation target
+    # aligned with it.  None = staged scoring, Cascade runs the
+    # sigma pass itself.
+    fused: tuple | None = None
 
 
 @dataclasses.dataclass
@@ -106,7 +113,7 @@ class RouteStage:
         ctx.confidence = np.ones(B, np.float64)
         ctx.fallback_depth = np.zeros(B, np.int64)
         if eng.cache is None:
-            pred, choice = eng._score_batch(ctx.reqs)
+            pred, choice = self._score_rows(ctx, list(range(B)))
             ctx.pred[:] = pred
             ctx.choice[:] = choice
             ctx.miss_idx = list(range(B))
@@ -136,8 +143,7 @@ class RouteStage:
                     [ctx.reqs[i] for i in misses],
                     np.stack([ctx.emb[i] for i in misses]))
             else:
-                mpred, mchoice = eng._score_batch(
-                    [ctx.reqs[i] for i in misses])
+                mpred, mchoice = self._score_rows(ctx, misses)
             for j, i in enumerate(misses):
                 ctx.pred[i] = mpred[j]
                 ctx.choice[i] = mchoice[j]
@@ -145,6 +151,19 @@ class RouteStage:
         eng.stats.cache_hits += B - len(misses)
         eng.stats.cache_misses += len(misses)
         return ctx
+
+    def _score_rows(self, ctx: RouteContext, rows: list[int]):
+        """Score the given ctx rows as one batch — through the fused
+        cascade kernel when the engine and the batch qualify (the
+        sigma/escalation payload rides along on ``ctx.fused`` for the
+        Cascade stage), through ``_score_batch`` otherwise."""
+        eng = self.eng
+        reqs = [ctx.reqs[i] for i in rows]
+        if eng._use_fused_cascade(reqs):
+            pred, choice, sigma, esc = eng._score_cascade_batch(reqs)
+            ctx.fused = (list(rows), sigma, esc)
+            return pred, choice
+        return eng._score_batch(reqs)
 
     def _dropped_lambda_sink(self, names: list) -> None:
         self.eng.stats.cache_key_dropped_lambda += len(names)
@@ -202,8 +221,16 @@ class CascadeStage:
             return ctx
         miss_reqs = [ctx.reqs[i] for i in ctx.miss_idx]
         mpred = ctx.pred[ctx.miss_idx]
-        mchoice, mdepth, mconf = eng._cascade(
-            miss_reqs, mpred, ctx.choice[ctx.miss_idx])
+        if ctx.fused is not None and ctx.fused[0] == ctx.miss_idx:
+            # the Route stage already has sigma and the depth-1
+            # escalation target from the fused kernel — resolve the
+            # verdict without a second router pass
+            _, sigma, esc = ctx.fused
+            mchoice, mdepth, mconf = eng._cascade_fused(
+                miss_reqs, mpred, ctx.choice[ctx.miss_idx], sigma, esc)
+        else:
+            mchoice, mdepth, mconf = eng._cascade(
+                miss_reqs, mpred, ctx.choice[ctx.miss_idx])
         for j, i in enumerate(ctx.miss_idx):
             ctx.choice[i] = mchoice[j]
             ctx.depth[i] = mdepth[j]

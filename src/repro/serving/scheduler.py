@@ -59,6 +59,7 @@ class LaneEntry:
     depth: int = 0            # cascade escalation steps (0 = first pick)
     confidence: float = 1.0   # router confidence in the final expert
     fallback_depth: int = 0   # health-fallback re-selections so far
+    spec: bool = False        # provisional: cascade verdict still pending
 
     @property
     def sort_key(self) -> tuple:
@@ -108,14 +109,27 @@ class Lane:
             out, self.entries = self.entries, []
         else:
             out, self.entries = self.entries[:n], self.entries[n:]
+        self._recompute_oldest()
+        return out
+
+    def remove(self, uid) -> LaneEntry | None:
+        """Remove and return the pending entry for ``uid`` (speculation
+        cancel), or None if it already flushed."""
+        for j, en in enumerate(self.entries):
+            if en.req.uid == uid:
+                self.entries.pop(j)
+                self._recompute_oldest()
+                return en
+        return None
+
+    def _recompute_oldest(self) -> None:
         if not self.entries:
             self._oldest = None
-        else:
-            arrivals = [
-                e.req.arrival for e in self.entries if e.req.arrival is not None
-            ]
-            self._oldest = min(arrivals) if arrivals else None
-        return out
+            return
+        arrivals = [
+            e.req.arrival for e in self.entries if e.req.arrival is not None
+        ]
+        self._oldest = min(arrivals) if arrivals else None
 
 
 class ExpertScheduler:
@@ -165,15 +179,33 @@ class ExpertScheduler:
         depth: int = 0,
         confidence: float = 1.0,
         fallback_depth: int = 0,
+        spec: bool = False,
     ) -> None:
         """Enqueue a routed request; escalated requests (``depth > 0``)
-        are re-enqueued into the target expert's escalation lane."""
+        are re-enqueued into the target expert's escalation lane.
+        ``spec`` marks the entry provisional — its cascade verdict is
+        still in flight and may cancel or confirm it."""
         lanes = self.esc_lanes if depth > 0 else self.lanes
         lanes[expert_idx].push(
             LaneEntry(req, pred, self._seq, cached, depth, confidence,
-                      fallback_depth)
+                      fallback_depth, spec)
         )
         self._seq += 1
+
+    def find_entry(self, expert_idx: int, uid) -> LaneEntry | None:
+        """The pending regular-lane entry for ``uid``, or None if it
+        already flushed.  Speculative entries always ride regular lanes
+        (their provisional depth is 0), so only that tier is searched."""
+        for en in self.lanes[expert_idx].entries:
+            if en.req.uid == uid:
+                return en
+        return None
+
+    def remove_entry(self, expert_idx: int, uid) -> LaneEntry | None:
+        """Cancel the pending regular-lane entry for ``uid``
+        (speculation escalated it elsewhere); None if it already
+        flushed."""
+        return self.lanes[expert_idx].remove(uid)
 
     # ------------------------------------------------------ batches out
 

@@ -140,6 +140,29 @@ def test_router_route_no_constraints_is_pure_argmin():
                                   np.asarray(pred).argmin(axis=1))
 
 
+@pytest.mark.parametrize("B", [1, 3, 127, 1000])
+def test_router_score_padded_tail_sweep(B):
+    """Every tail shape the launch plan produces — a single fully-padded
+    tile (B=1, 3), a ragged multi-tile tail (127 % 32 != 0) and a
+    serving-scale batch (1000 % 128 != 0) — must match the oracle."""
+    d, hid, M, nc = 32, 16, 5, 2
+    block_b = 128 if B >= 128 else 32
+    ks = jax.random.split(jax.random.PRNGKey(B), 7)
+    emb = jax.random.normal(ks[0], (B, d))
+    w1 = jax.random.normal(ks[1], (d, hid)) * 0.1
+    b1 = jax.random.normal(ks[2], (hid,)) * 0.1
+    w2 = jax.random.normal(ks[3], (hid, M)) * 0.1
+    b2 = jax.random.normal(ks[4], (M,)) * 0.1
+    cv = jax.random.uniform(ks[5], (nc, M))
+    lam = jax.random.uniform(ks[6], (B, nc)) * 2
+    p1, c1 = router_score_fused(emb, w1, b1, w2, b2, cv, lam,
+                                block_b=block_b)
+    p2, c2 = router_score_ref(emb, w1, b1, w2, b2, cv, lam)
+    assert p1.shape == (B, M) and c1.shape == (B,)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
 # ------------------------------------------------------- mlstm chunkwise
 
 @pytest.mark.parametrize("B,S,H,dh,chunk", [

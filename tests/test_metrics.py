@@ -32,6 +32,11 @@ class FakeStats:
         self.cache_key_dropped_lambda = 0
         self.escalations = 1
         self.cascade_depth_hist = {1: 1}
+        self.spec_launched = 4
+        self.spec_hits = 2
+        self.spec_cancelled = 1
+        self.spec_wasted = 1
+        self.spec_wasted_tokens = 32
         self.fallbacks = 2
         self.fallback_depth_hist = {1: 2}
         self.degraded = 0

@@ -1,0 +1,216 @@
+"""One-launch cascade decision kernel (``kernels.router_cascade``).
+
+Three parity layers, mirroring the contract every kernel in this repo
+carries (the kernel is an optimisation, never a behaviour change):
+
+* kernel vs. the pure-jnp oracle (``ref.py``) across padded-tail batch
+  sizes (1, 3, 127, 1000 — every tail shape the launch plan produces);
+* the kernel's depth-1 escalation target vs. the host
+  ``objective.cascade_choice`` walk, tie-breaks included;
+* the fused-cascade engine vs. the staged engine on a mixed-threshold
+  workload, under both disciplines — identical choices, depths and
+  confidences.
+
+Deliberately hypothesis-free so the module runs without the optional
+property-testing dep.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.objective import (cascade_choice, confidence_scores,
+                                  recency_constraint, size_constraint)
+from repro.core.router import RouterConfig, init_router
+from repro.data.batching import mlm_batch
+from repro.kernels.router_cascade.kernel import router_score_cascade_fused
+from repro.kernels.router_cascade.ref import router_score_cascade_ref
+from repro.serving import Request, TryageEngine
+
+RC = RouterConfig(n_models=3, vocab_size=64, num_layers=1, d_model=32,
+                  num_heads=2, d_ff=64)
+
+
+def _workload(seed, B, d=32, hid=16, M=5, nc=2):
+    """Random embeddings + both heads + constraints + a random ladder."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 12)
+    emb = jax.random.normal(ks[0], (B, d))
+    w1 = jax.random.normal(ks[1], (d, hid)) * 0.1
+    b1 = jax.random.normal(ks[2], (hid,)) * 0.1
+    w2 = jax.random.normal(ks[3], (hid, M)) * 0.1
+    b2 = jax.random.normal(ks[4], (M,)) * 0.1
+    uw1 = jax.random.normal(ks[5], (d, hid)) * 0.1
+    ub1 = jax.random.normal(ks[6], (hid,)) * 0.1
+    uw2 = jax.random.normal(ks[7], (hid, M)) * 0.1
+    ub2 = jax.random.normal(ks[8], (M,)) * 0.1
+    cvals = jax.random.uniform(ks[9], (nc, M))
+    lam = jax.random.uniform(ks[10], (B, nc)) * 2
+    ladder = jnp.asarray(jax.random.permutation(ks[11], M), jnp.int32)
+    return (emb, w1, b1, w2, b2, uw1, ub1, uw2, ub2, cvals, lam, ladder)
+
+
+# ----------------------------------------------------- kernel vs oracle
+
+@pytest.mark.parametrize("B,block_b", [
+    (1, 16),       # single row, tile fully padded
+    (3, 16),       # tiny ragged batch
+    (37, 16),      # multi-tile ragged tail
+    (127, 32),     # 127 % 32 != 0
+    (1000, 128),   # serving-scale ragged tail (1000 % 128 != 0)
+])
+def test_cascade_kernel_vs_ref(B, block_b):
+    args = _workload(B, B)
+    p1, s1, c1, e1 = router_score_cascade_fused(*args, block_b=block_b)
+    p2, s2, c2, e2 = router_score_cascade_ref(*args)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+    assert np.asarray(s1).min() > 0.0          # sigma floor survived
+
+
+def test_cascade_kernel_block_size_invariance():
+    """Tile geometry must not change any output: same batch under a
+    1-tile and a 5-tile launch."""
+    args = _workload(3, 37)
+    big = router_score_cascade_fused(*args, block_b=1024)   # clamps to 37
+    small = router_score_cascade_fused(*args, block_b=8)
+    for a, b in zip(big[:2], small[:2]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    for a, b in zip(big[2:], small[2:]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cascade_kernel_pad_rows_do_not_leak():
+    """Real rows must be independent of whatever shares their tile: the
+    first 7 rows of a 7-row call and of a 29-row call (same weights,
+    extra garbage rows appended) must agree."""
+    emb, *rest = _workload(5, 29)
+    ladder = rest[-1]
+    outs_full = router_score_cascade_fused(emb, *rest, block_b=16)
+    lam = rest[-2]
+    outs_head = router_score_cascade_fused(
+        emb[:7], *rest[:-2], lam[:7], ladder, block_b=16)
+    for a, b in zip(outs_head[:2], outs_full[:2]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b)[:7],
+                                   atol=1e-6)
+    for a, b in zip(outs_head[2:], outs_full[2:]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b)[:7])
+
+
+def test_escalation_target_matches_host_walk():
+    """The kernel's ``esc`` output is the router-preferred depth-1 step
+    of ``cascade_choice`` — same target, same tie-break — and echoes
+    ``choice`` at the top rung."""
+    B, M = 64, 5
+    args = _workload(7, B, M=M)
+    pred, sigma, choice, esc = (np.asarray(x) for x in
+                                router_score_cascade_fused(*args,
+                                                           block_b=16))
+    cvals = np.asarray(args[9])
+    lam = np.asarray(args[10])
+    ladder_pos = np.asarray(args[11])
+    # order[pos] = expert at that ladder rung (inverse permutation)
+    order = [int(i) for i in np.argsort(ladder_pos)]
+    conf = confidence_scores(sigma)
+    scores = pred + lam @ cvals
+    for i in range(B):
+        # threshold above any attainable confidence forces one step
+        final, depth = cascade_choice(int(choice[i]), conf[i], 2.0,
+                                      order, 1, scores[i])
+        if ladder_pos[choice[i]] == M - 1:
+            assert depth == 0 and int(esc[i]) == int(choice[i])
+        else:
+            assert depth == 1 and int(esc[i]) == final
+
+
+# ------------------------------------------------ engine-level parity
+
+def _requests(n, seed=0):
+    """Mixed-threshold workload: single-shot rows interleaved with
+    shallow and deep escalation candidates."""
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(4, 64, size=(n, 32)).astype(np.int32)
+    mb = mlm_batch(toks, rng, 0.2, 64)
+    lam_mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
+    thr_mix = [0.0, 0.4, 0.8, 0.99]
+    return [Request(uid=i, tokens=mb["tokens"][i], targets=mb["targets"][i],
+                    mask=mb["mask"][i], lambdas=lam_mix[i % len(lam_mix)],
+                    min_confidence=thr_mix[i % len(thr_mix)])
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def engines(tiny_library):
+    """(staged, fused) engines over identical weights; the fused one is
+    instrumented to prove the one-launch path actually ran."""
+    rp, _ = init_router(jax.random.PRNGKey(9), RC, uncertainty=True)
+    cons = [size_constraint(tiny_library), recency_constraint(tiny_library)]
+
+    def mk(**kw):
+        return TryageEngine(tiny_library, rp, RC, cons, max_batch=8,
+                            use_kernel=True, cascade_max_depth=2, **kw)
+
+    staged = mk()
+    fused = mk(fused_cascade=True)
+    fused._fused_calls = []
+    orig = fused._score_cascade_batch
+    fused._score_cascade_batch = (
+        lambda reqs: (fused._fused_calls.append(len(reqs)), orig(reqs))[1])
+    return staged, fused
+
+
+def _by_uid(results):
+    return sorted(results, key=lambda r: r.uid)
+
+
+@pytest.mark.parametrize("discipline", ["run", "serve"])
+def test_fused_engine_matches_staged(engines, discipline):
+    staged, fused = engines
+    reqs_a, reqs_b = _requests(37, seed=1), _requests(37, seed=1)
+    if discipline == "run":
+        for r in reqs_a:
+            staged.submit(r)
+        for r in reqs_b:
+            fused.submit(r)
+        res_s, res_f = _by_uid(staged.run()), _by_uid(fused.run())
+    else:
+        res_s = _by_uid(staged.serve(iter(reqs_a)))
+        res_f = _by_uid(fused.serve(iter(reqs_b)))
+    assert [r.uid for r in res_s] == [r.uid for r in res_f]
+    assert [r.expert for r in res_s] == [r.expert for r in res_f]
+    assert ([r.cascade_depth for r in res_s]
+            == [r.cascade_depth for r in res_f])
+    np.testing.assert_allclose([r.confidence for r in res_s],
+                               [r.confidence for r in res_f], atol=1e-6)
+    for a, b in zip(res_s, res_f):
+        np.testing.assert_allclose(a.pred_losses, b.pred_losses, atol=1e-5)
+    # the comparison is only meaningful if escalation traffic existed
+    # and the fused engine actually took the one-launch path
+    assert any(r.cascade_depth > 0 for r in res_s)
+    assert fused._fused_calls
+
+
+def test_fused_gate_degrades_to_staged_without_unc_head(tiny_library):
+    """``fused_cascade=True`` with a router that has no uncertainty head
+    is a no-op, not an error: the engine runs the staged path and
+    matches a plain staged engine on the same weights."""
+    rp, _ = init_router(jax.random.PRNGKey(9), RC)     # no "unc"
+    cons = [size_constraint(tiny_library), recency_constraint(tiny_library)]
+
+    def mk(**kw):
+        return TryageEngine(tiny_library, rp, RC, cons, max_batch=8,
+                            use_kernel=True, **kw)
+
+    eng = mk(fused_cascade=True)
+    ref = mk()
+    assert not eng._use_fused_cascade(_requests(8))
+    for r in _requests(8, seed=3):
+        eng.submit(r)
+    for r in _requests(8, seed=3):
+        ref.submit(r)
+    out, out_ref = _by_uid(eng.run()), _by_uid(ref.run())
+    assert [r.expert for r in out] == [r.expert for r in out_ref]
+    assert ([r.cascade_depth for r in out]
+            == [r.cascade_depth for r in out_ref])

@@ -1,0 +1,247 @@
+"""Speculative escalation in ``serve()`` (``speculate=True``).
+
+The contracts under test:
+
+* decisions are untouched — speculation changes *when* a request enters
+  its lane, never *where* it ends up: expert, depth and confidence
+  match the non-speculative engine request-for-request;
+* exactly-once — every request yields exactly one Result, and the
+  telemetry balances: ``spec_launched == spec_hits + spec_cancelled +
+  spec_wasted`` after every serve;
+* the cancel path (verdict lands while the entry is still queued) does
+  no wasted compute; the wasted path (entry flushed before its verdict)
+  reverts the discarded Result's per-request accounting;
+* the soundness gates: a health tracker or an all-single-shot workload
+  turns speculation off silently.
+
+Deliberately hypothesis-free so the module runs without the optional
+property-testing dep.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.objective import recency_constraint, size_constraint
+from repro.core.router import RouterConfig, init_router
+from repro.data.batching import mlm_batch
+from repro.serving import Request, TryageEngine
+from repro.serving.health import ExpertHealth
+from repro.serving.scheduler import ExpertScheduler
+
+RC = RouterConfig(n_models=3, vocab_size=64, num_layers=1, d_model=32,
+                  num_heads=2, d_ff=64)
+
+
+class Clock:
+    def __init__(self, t=1.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def router_params():
+    rp, _ = init_router(jax.random.PRNGKey(9), RC, uncertainty=True)
+    return rp
+
+
+def _requests(n, seed=0, thresholds=(0.0, 0.4, 0.99)):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(4, 64, size=(n, 32)).astype(np.int32)
+    mb = mlm_batch(toks, rng, 0.2, 64)
+    lam_mix = [{}, {"size": 1.0}, {"size": 8.0}, {"recency": 2.0}]
+    return [Request(uid=i, tokens=mb["tokens"][i], targets=mb["targets"][i],
+                    mask=mb["mask"][i], lambdas=lam_mix[i % len(lam_mix)],
+                    min_confidence=thresholds[i % len(thresholds)])
+            for i in range(n)]
+
+
+def _engine(library, params, clock, **kw):
+    cons = [size_constraint(library), recency_constraint(library)]
+    kw.setdefault("max_batch", 8)
+    return TryageEngine(library, params, RC, cons, now_fn=clock, **kw)
+
+
+def _check_exactly_once(eng, results, n):
+    assert len(results) == n
+    assert len({r.uid for r in results}) == n
+    st = eng.stats
+    assert st.spec_launched == (st.spec_hits + st.spec_cancelled
+                                + st.spec_wasted), (
+        "speculation accounting must balance")
+
+
+def _by_uid(results):
+    return sorted(results, key=lambda r: r.uid)
+
+
+def test_decisions_match_nonspeculative(tiny_library, router_params):
+    """Same workload through a speculative and a plain engine: the
+    Results agree on every routing-visible field."""
+    n = 40
+    base = _engine(tiny_library, router_params, Clock())
+    spec = _engine(tiny_library, router_params, Clock(), speculate=True)
+    res_b = _by_uid(base.serve(iter(_requests(n))))
+    res_s = _by_uid(spec.serve(iter(_requests(n))))
+    _check_exactly_once(spec, res_s, n)
+    assert spec.stats.spec_launched > 0
+    assert [r.expert for r in res_b] == [r.expert for r in res_s]
+    assert ([r.cascade_depth for r in res_b]
+            == [r.cascade_depth for r in res_s])
+    np.testing.assert_allclose([r.confidence for r in res_b],
+                               [r.confidence for r in res_s], atol=1e-12)
+    for a, b in zip(res_b, res_s):
+        np.testing.assert_allclose(a.pred_losses, b.pred_losses)
+    assert base.stats.escalations == spec.stats.escalations > 0
+    assert base.stats.served == spec.stats.served == n
+
+
+def test_cancel_path_no_wasted_compute(tiny_library, router_params):
+    """Huge lane target + frozen clock: nothing flushes before the
+    verdict lands, so every escalation cancels its provisional entry in
+    place — zero wasted executions."""
+    n = 24
+    eng = _engine(tiny_library, router_params, Clock(), speculate=True,
+                  lane_target=100, max_wait_s=100.0)
+    results = _by_uid(eng.serve(iter(_requests(n, thresholds=(0.99,)))))
+    _check_exactly_once(eng, results, n)
+    st = eng.stats
+    assert st.spec_launched == n                   # every row speculated
+    assert st.spec_cancelled > 0
+    assert st.spec_wasted == 0 and st.spec_wasted_tokens == 0
+    assert st.escalations == st.spec_cancelled
+    # every escalated Result came from a cancel+re-lane, confident rows
+    # from an in-place confirm
+    assert (sum(1 for r in results if r.cascade_depth > 0)
+            == st.spec_cancelled)
+    assert st.served == n
+
+
+def test_wasted_path_reverts_accounting(tiny_library, router_params):
+    """Lane target 1: every provisional entry flushes before its
+    verdict, so each escalation discards an executed Result.  The
+    replacement execution must leave per-request stats exactly-once."""
+    n = 16
+    eng = _engine(tiny_library, router_params, Clock(), speculate=True,
+                  lane_target=1, max_wait_s=100.0)
+    results = _by_uid(eng.serve(iter(_requests(n, thresholds=(0.99,)))))
+    _check_exactly_once(eng, results, n)
+    st = eng.stats
+    assert st.spec_wasted > 0 and st.spec_cancelled == 0
+    assert st.spec_wasted_tokens == st.spec_wasted * 32
+    # discarded Results were reverted: per-request counters see each
+    # request exactly once
+    assert st.served == n
+    assert sum(st.per_expert.values()) == n
+    assert sum(st.cascade_depth_hist.values()) == n
+    assert st.escalations == sum(1 for r in results if r.cascade_depth > 0)
+    assert len(st.latencies) == n
+
+
+def test_confirmed_speculation_flushes_in_lane(tiny_library, router_params):
+    """All-confirm traffic (threshold low enough to hold): provisional
+    entries are promoted in place and ride their original lane —
+    spec_hits only, choices identical to the plain engine."""
+    n = 24
+    thr = (0.01,)
+    base = _engine(tiny_library, router_params, Clock())
+    spec = _engine(tiny_library, router_params, Clock(), speculate=True,
+                   lane_target=100, max_wait_s=100.0)
+    res_b = _by_uid(base.serve(iter(_requests(n, thresholds=thr))))
+    res_s = _by_uid(spec.serve(iter(_requests(n, thresholds=thr))))
+    _check_exactly_once(spec, res_s, n)
+    st = spec.stats
+    assert st.spec_launched == n == st.spec_hits
+    assert st.spec_cancelled == st.spec_wasted == 0
+    assert [r.expert for r in res_b] == [r.expert for r in res_s]
+    np.testing.assert_allclose([r.confidence for r in res_b],
+                               [r.confidence for r in res_s], atol=1e-12)
+
+
+def test_speculation_off_is_byte_identical(tiny_library, router_params):
+    """The gates that disable speculation (flag off; health tracker
+    attached; no cascade traffic) reproduce the plain engine exactly —
+    full Result dicts under a frozen clock."""
+
+    def run(**kw):
+        eng = _engine(tiny_library, router_params, Clock(), **kw)
+        res = _by_uid(eng.serve(iter(_requests(24, thresholds=(0.0,)))))
+        return eng, res
+
+    def dicts(results):
+        out = []
+        for r in results:
+            d = dataclasses.asdict(r)
+            d["pred_losses"] = d["pred_losses"].tobytes()
+            d["predictions"] = d["predictions"].tobytes()
+            out.append(d)
+        return out
+
+    _, plain = run()
+    for kw in ({"speculate": True},                       # no cascade rows
+               {"speculate": False}):                     # flag off
+        eng, res = run(**kw)
+        assert eng.stats.spec_launched == 0
+        assert dicts(res) == dicts(plain)
+    # health tracker: speculation is refused, serve still works
+    eng, res = run(speculate=True,
+                   health=ExpertHealth(len(tiny_library)))
+    assert eng.stats.spec_launched == 0
+    assert len(res) == 24
+
+
+def test_run_discipline_ignores_speculate(tiny_library, router_params):
+    """``run()`` (FIFO drain) has no lanes to speculate into: the flag
+    must be inert there."""
+    eng = _engine(tiny_library, router_params, Clock(), speculate=True)
+    for r in _requests(16):
+        eng.submit(r)
+    out = eng.run()
+    assert len(out) == 16 and eng.stats.spec_launched == 0
+
+
+# --------------------------------------------- scheduler cancel surface
+
+def _req(uid, arrival):
+    return Request(uid=uid, tokens=np.ones(8, np.int32), arrival=arrival)
+
+
+def test_scheduler_remove_entry_recomputes_oldest():
+    sched = ExpertScheduler(2, target=8, max_wait_s=1.0)
+    pred = np.zeros(2, np.float32)
+    sched.push(0, _req(1, arrival=1.0), pred, spec=True)
+    sched.push(0, _req(2, arrival=2.0), pred, spec=True)
+    sched.push(0, _req(3, arrival=3.0), pred)
+    lane = sched.lanes[0]
+    assert lane.oldest_wait(5.0) == 4.0
+    en = sched.remove_entry(0, 1)                 # cancel the oldest
+    assert en is not None and en.req.uid == 1 and en.spec
+    assert lane.oldest_wait(5.0) == 3.0           # deadline clock moved
+    assert sched.remove_entry(0, 99) is None      # already gone: no-op
+    assert sched.find_entry(0, 2) is not None
+    assert sched.find_entry(0, 2).spec
+    en2 = sched.remove_entry(0, 2)
+    assert en2.req.uid == 2
+    assert lane.oldest_wait(5.0) == 2.0
+    assert sched.pending == 1
+    assert sched.remove_entry(0, 3).req.uid == 3
+    assert lane.oldest_wait(5.0) == 0.0 and sched.pending == 0
+
+
+def test_scheduler_find_entry_searches_regular_lane_only():
+    """Speculative entries always carry depth 0, so the cancel surface
+    only looks at regular lanes; escalation-lane traffic is invisible
+    to it."""
+    sched = ExpertScheduler(2, target=8, max_wait_s=1.0)
+    pred = np.zeros(2, np.float32)
+    sched.push(1, _req(7, arrival=1.0), pred, depth=1)    # esc lane
+    assert sched.find_entry(1, 7) is None
+    assert sched.remove_entry(1, 7) is None
+    assert sched.pending == 1                     # esc entry untouched
